@@ -1,0 +1,99 @@
+"""Shared benchmark plumbing: train-once/eval-many tiny models.
+
+The paper evaluates by *injecting* the approximation units into an FP32
+model at inference (``FP32 + Ours``).  We mirror that: train a reduced
+GPT-Neo backbone (the paper's perplexity backbone) on the synthetic
+Zipf-Markov corpus with exact non-GEMM ops, cache the params, then re-evaluate
+the same params under every softmax/norm implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs.registry import get_config, reduce_config
+from repro.data.synthetic import DataConfig, batch_at, optimal_perplexity
+from repro.models.transformer import make_model
+from repro.train.loop import make_train_step
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+ART = Path(__file__).resolve().parent.parent / "experiments" / "artifacts"
+
+TINY_DATA = DataConfig(vocab=512, seq_len=64, global_batch=16, branching=8, zipf_a=1.5)
+
+
+def tiny_cfg(**over):
+    cfg = reduce_config(
+        get_config("gpt-neo-1.3b"),
+        d_model=128, n_layers=4, n_heads=4, n_kv_heads=4, d_ff=512,
+        vocab=TINY_DATA.vocab,
+    )
+    # FP32-exact non-GEMM for the baseline training run
+    return dataclasses.replace(
+        cfg, softmax_impl="exact", norm_impl="exact_ln", dtype="float32", **over
+    )
+
+
+def train_tiny(steps: int = 300, tag: str = "tiny_lm", **cfg_over):
+    """Train (or load cached) the shared tiny backbone.  Returns (cfg, model, params)."""
+    cfg = tiny_cfg(**cfg_over)
+    model = make_model(cfg)
+    ckdir = ART / tag
+    latest = store.latest_step(ckdir)
+    params = model.init(jax.random.PRNGKey(0))
+    if latest == steps:
+        (params,), _ = store.restore(ckdir, steps, (params,))
+        return cfg, model, params
+    opt_cfg = OptimizerConfig(lr=3e-3, warmup_steps=20, total_steps=steps,
+                              weight_decay=0.01)
+    opt_state = init_opt_state(opt_cfg, params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+    t0 = time.time()
+    for step in range(steps):
+        params, opt_state, m = step_fn(params, opt_state, batch_at(TINY_DATA, step))
+        if step % 50 == 0 or step == steps - 1:
+            print(f"  [train {tag}] step {step} loss {float(m['loss']):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    store.save(ckdir, steps, (params,))
+    return cfg, model, params
+
+
+def eval_metrics(cfg, params, n_batches: int = 4, seed0: int = 10_000) -> dict:
+    """Held-out perplexity (score) + next-token top-1 accuracy (rank)."""
+    model = make_model(cfg)
+    fwd = jax.jit(model.forward)
+    nlls, accs = [], []
+    for i in range(n_batches):
+        batch = batch_at(TINY_DATA, seed0 + i)
+        logits, _ = fwd(params, batch)
+        logits = logits[:, :-1].astype(jnp.float32)
+        targets = batch["tokens"][:, 1:]
+        logp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], -1)[..., 0]
+        nlls.append(np.asarray(nll).ravel())
+        accs.append(np.asarray(jnp.argmax(logits, -1) == targets).ravel())
+    nll = np.concatenate(nlls)
+    acc = np.concatenate(accs)
+    return {
+        "perplexity": float(np.exp(nll.mean())),
+        "top1_acc": float(acc.mean()),
+        "optimal_perplexity": optimal_perplexity(TINY_DATA),
+    }
+
+
+def with_impls(cfg, softmax_impl: str, norm_impl: str):
+    return dataclasses.replace(cfg, softmax_impl=softmax_impl, norm_impl=norm_impl)
+
+
+def writeout(name: str, payload: dict):
+    out = ART.parent / "results"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{name}.json").write_text(json.dumps(payload, indent=2, default=float))
+    return payload

@@ -1,0 +1,75 @@
+"""Fig. 5 analogue: distribution of normalization errors during evaluation.
+
+Collects |1 - Σp| over every attention softmax row and |1 - σ| over every
+LayerNorm row while the trained model evaluates held-out batches, per
+implementation.  Paper: 77.1% of softmax and 100% of LN errors < 0.2e-6
+for the proposed design; baselines orders of magnitude worse.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import TINY_DATA, train_tiny, writeout
+from repro.core import error_histogram, get_norm, get_softmax, metrics
+from repro.data.synthetic import batch_at
+
+
+def _collect_attention_inputs(cfg, model, params, n_batches=2):
+    """Grab raw attention scores + pre-norm activations via a probe forward."""
+    from repro.models.rope import apply_rope
+
+    scores_all, acts_all = [], []
+    fwd = jax.jit(model.forward)
+    # probe: recompute the first layer's scores/activations explicitly
+    for i in range(n_batches):
+        batch = batch_at(TINY_DATA, 20_000 + i)
+        toks = batch["tokens"]
+        x = params["embed"]["tok"][toks].astype(jnp.float32)
+        acts_all.append(np.asarray(x.reshape(-1, x.shape[-1])))
+        lp = jax.tree.map(lambda a: a[0], params["layers"])
+        b, s, d = x.shape
+        h, hd = cfg.n_heads, cfg.head_dim
+        q = (x @ lp["mixer"]["wq"]).reshape(b, s, h, hd)
+        k = (x @ lp["mixer"]["wk"]).reshape(b, s, h, hd)
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        sc = jnp.einsum("bshd,bthd->bhst", q, k) * hd**-0.5
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        scores_all.append(np.asarray(sc.reshape(-1, s)))
+    return np.concatenate(scores_all), np.concatenate(acts_all)
+
+
+def run(steps: int = 300) -> dict:
+    cfg, model, params = train_tiny(steps)
+    scores, acts = _collect_attention_inputs(cfg, model, params)
+    scores = jnp.asarray(scores)
+    acts = jnp.asarray(acts)
+
+    out = {"softmax": {}, "layernorm": {}}
+    for name in ("exact", "gn", "gn_hwsim", "softermax", "pseudo", "log_domain"):
+        p = get_softmax(name)(scores)
+        err = np.asarray(metrics.softmax_norm_error(p))
+        out["softmax"][name] = error_histogram(err)
+    for name in ("exact_ln", "gn_ln", "gn_ln_hwsim", "integer_ln", "lut_ln"):
+        y = get_norm(name)(acts)
+        err = np.asarray(metrics.layernorm_norm_error(y))
+        out["layernorm"][name] = error_histogram(err)
+    return writeout("fig5_norm_error", out)
+
+
+def main():
+    out = run()
+    for fam in ("softmax", "layernorm"):
+        print(f"--- {fam} normalization error ---")
+        print(f"{'impl':12s} {'mean':>10s} {'max':>10s} {'<2e-7':>7s}")
+        for k, h in out[fam].items():
+            print(f"{k:12s} {h['mean']:10.2e} {h['max']:10.2e} "
+                  f"{100*h['frac_below_0.2e-6']:6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks: Pallas GN kernels vs jnp references.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-times are NOT TPU projections — reported for relative tracking only.
+The structural numbers (VMEM working set per BlockSpec tile, HLO flops and
+bytes of the reference path) are hardware-independent and feed §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import writeout
+from repro.core.luts import TPU_SOFTMAX_LUT
+from repro.kernels.gn_attention.ref import gn_attention_ref
+from repro.kernels.gn_softmax.ref import gn_softmax_ref
+from repro.kernels.gn_layernorm.ref import gn_layernorm_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _ref_cost(fn, *args) -> dict:
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(c, list):
+        c = c[0]
+    return {"flops": float(c.get("flops", 0)), "bytes": float(c.get("bytes accessed", 0))}
+
+
+def vmem_bytes_softmax(block_rows=256, cols=2048):
+    # x tile + y + LUT operands, f32
+    return (block_rows * cols * 2 + 2 * 128) * 4
+
+
+def vmem_bytes_attention(bq=128, bk=128, d=128):
+    # q,k,v tiles + acc + m/l + scores
+    return (bq * d * 2 + 2 * bk * d + bq * bk + 2 * bq * 128) * 4
+
+
+def run() -> dict:
+    out = {}
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 2048))
+    j_ref = jax.jit(lambda v: gn_softmax_ref(v, TPU_SOFTMAX_LUT))
+    out["gn_softmax"] = {
+        "ref_us": _time(j_ref, x),
+        **_ref_cost(lambda v: gn_softmax_ref(v, TPU_SOFTMAX_LUT), x),
+        "vmem_tile_bytes": vmem_bytes_softmax(),
+    }
+    g = jnp.ones((2048,))
+    b = jnp.zeros((2048,))
+    j_ln = jax.jit(lambda v: gn_layernorm_ref(v, g, b))
+    out["gn_layernorm"] = {
+        "ref_us": _time(j_ln, x),
+        **_ref_cost(lambda v: gn_layernorm_ref(v, g, b), x),
+        "vmem_tile_bytes": vmem_bytes_softmax(),
+    }
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 256, 64)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 256, 64)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 256, 64))
+    j_at = jax.jit(lambda a, b2, c: gn_attention_ref(a, b2, c, causal=True))
+    out["gn_attention"] = {
+        "ref_us": _time(j_at, q, k, v),
+        **_ref_cost(lambda a, b2, c: gn_attention_ref(a, b2, c, causal=True), q, k, v),
+        "vmem_tile_bytes": vmem_bytes_attention(),
+    }
+    return writeout("kernel_bench", out)
+
+
+def main():
+    rows = run()
+    print(f"{'kernel':14s} {'ref_us':>10s} {'MFLOP':>8s} {'MB':>8s} {'VMEM_KB':>8s}")
+    for k, m in rows.items():
+        print(f"{k:14s} {m['ref_us']:10.1f} {m['flops']/1e6:8.2f} "
+              f"{m['bytes']/1e6:8.2f} {m['vmem_tile_bytes']/1024:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load(mesh: str = "pod16x16") -> list[dict]:
+    rows = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def render(mesh: str = "pod16x16") -> str:
+    rows = load(mesh)
+    lines = [
+        f"### Roofline — mesh {mesh}",
+        "",
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "useful/HLO flops | roofline frac | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | FAILED | — | — | — |"
+            )
+            continue
+        f = r["roofline"]
+        mem = r["memory"]["temp_bytes"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {f['compute_s']:.4f} | "
+            f"{f['memory_s']:.4f} | {f['collective_s']:.4f} | {f['bottleneck']} | "
+            f"{f['useful_flops_ratio']:.3f} | {f['roofline_fraction']:.3f} | {mem:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(render(mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Table II analogue: score-task degradation, ours vs prior approximations.
+
+Paper claim: unnormalized designs (Softermax [5], quant-approx [13], SoftmAP
+[14]) lose 0.49–13.68% on score-oriented tasks; guaranteed normalization
+loses ~0.  Same protocol as table1: inject each non-GEMM implementation into
+the FP32-trained model and measure perplexity degradation.
+"""
+from __future__ import annotations
+
+from benchmarks.common import eval_metrics, train_tiny, with_impls, writeout
+
+METHODS = {
+    # label: (softmax_impl, norm_impl) — norm baselines paired as in refs
+    "Softermax[5]-style": ("softermax", "exact_ln"),
+    "QuantApprox[13]-style": ("log_domain", "integer_ln"),
+    "PseudoSoftmax[6]-style": ("pseudo", "exact_ln"),
+    "LUT-LN[15]-style": ("exact", "lut_ln"),
+    "Proposed(GN)": ("gn", "gn_ln"),
+}
+
+
+def run(steps: int = 300) -> dict:
+    cfg, model, params = train_tiny(steps)
+    base = eval_metrics(cfg, params)
+    rows = {"FP32": {**base, "ppl_drop_%": 0.0}}
+    for label, (sm, nm) in METHODS.items():
+        m = eval_metrics(with_impls(cfg, sm, nm), params)
+        m["ppl_drop_%"] = 100.0 * (m["perplexity"] - base["perplexity"]) / base["perplexity"]
+        rows[label] = m
+    return writeout("table2_score_tasks", rows)
+
+
+def main():
+    rows = run()
+    print(f"{'method':24s} {'ppl':>9s} {'drop%':>8s} {'top1':>7s}")
+    for k, m in rows.items():
+        print(f"{k:24s} {m['perplexity']:9.3f} {m['ppl_drop_%']:8.3f} {m['top1_acc']:7.4f}")
+
+
+if __name__ == "__main__":
+    main()

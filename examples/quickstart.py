@@ -1,0 +1,58 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Demonstrates the two Guaranteed-Normalization (GN) non-GEMM blocks from
+"Hardware-Efficient Softmax and Layer Normalization with Guaranteed
+Normalization for Edge Devices" (Choi, Kim & Kim, CS.AR 2026):
+
+  * GN-Softmax  — two-LUT factorized exponential + fixed-point renormalize,
+                  guaranteeing sum(p) = 1
+  * GN-LayerNorm — CoRN (LOD + Newton) reciprocal sqrt, guaranteeing sigma = 1
+
+and shows the paper's central claim: approximation methods that look fine by
+max-abs error can still carry *normalization error*, which the GN designs
+eliminate by construction.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import get_norm, get_softmax
+from repro.core.metrics import layernorm_norm_error, softmax_norm_error
+
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (8, 128)) * 4.0  # logit-scale inputs
+
+
+def show(name, p, exact):
+    nerr = float(jnp.max(softmax_norm_error(p)))
+    aerr = float(jnp.max(jnp.abs(p - exact)))
+    print(f"  {name:<12} |1-sum(p)| = {nerr:.3e}   max|p-exact| = {aerr:.3e}")
+
+
+print("== Softmax: normalization error vs approximation error ==")
+exact = get_softmax("exact")(x)
+for name in ("exact", "gn", "gn_hwsim", "softermax", "pseudo", "log_domain"):
+    show(name, get_softmax(name)(x), exact)
+
+print("\n== LayerNorm: |1 - sigma| of the normalized output ==")
+h = jax.random.normal(key, (8, 1024)) * 7.0 + 3.0
+for name in ("exact_ln", "gn_ln", "gn_ln_hwsim", "integer_ln", "lut_ln"):
+    y = get_norm(name)(h)
+    print(f"  {name:<12} max|1-sigma| = {float(jnp.max(layernorm_norm_error(y))):.3e}")
+
+print("\n== GN ops are differentiable (custom JVP: exact Jacobian at the")
+print("   approximated output — tangents preserve sum(dp) = 0) ==")
+g = jax.grad(lambda z: get_softmax("gn")(z).var())(x[0])
+print(f"  grad ok, sum over row (should be ~0 by the guarantee): {float(g.sum()):.2e}")
+
+print("\n== Drop-in inside a model: softmax_impl / norm_impl config axis ==")
+from repro.configs.registry import get_config, reduce_config
+from repro.models.transformer import make_model
+
+cfg = reduce_config(get_config("internlm2-1.8b"), softmax_impl="gn", norm_impl="gn_rms")
+model = make_model(cfg)
+params = model.init(jax.random.PRNGKey(1))
+tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
+logits, _ = jax.jit(model.forward)(params, {"tokens": tokens})
+print(f"  {cfg.name}: forward OK, logits {logits.shape}, finite={bool(jnp.isfinite(logits).all())}")

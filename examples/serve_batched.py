@@ -1,0 +1,68 @@
+"""Batched serving with GN non-GEMM ops — the paper's deployment scenario.
+
+The paper targets edge *inference*: Softmax/LayerNorm units inside a serving
+datapath. This example runs the full serving stack on a small in-framework
+model: prefill a batch of prompts, decode new tokens with the per-family
+KV cache, and score the outputs — comparing the GN implementation against
+an unnormalized baseline (Softermax) to show why guaranteed normalization
+matters for score-oriented serving (log-prob scoring, perplexity).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch internlm2-1.8b]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, list_archs, reduce_config
+from repro.data.synthetic import DataConfig, batch_at
+from repro.models.transformer import make_model
+from repro.serve.engine import ServeConfig, generate, perplexity
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    base = reduce_config(get_config(args.arch))
+    data = DataConfig(vocab=base.vocab, seq_len=args.prompt_len,
+                      global_batch=args.batch, seed=3)
+    prompts = batch_at(data, 0)
+    if base.family == "encdec":
+        prompts["frames"] = jnp.zeros((args.batch, base.encoder_seq, base.d_model))
+    if base.family == "vlm":
+        prompts["patches"] = jnp.zeros((args.batch, base.num_patches, base.d_model))
+
+    results = {}
+    for impl in ("exact", "gn", "softermax"):
+        cfg = dataclasses.replace(base, softmax_impl=impl)
+        model = make_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))  # same weights across impls
+
+        t0 = time.time()
+        out = generate(model, params, prompts, ServeConfig(max_new_tokens=args.new_tokens))
+        dt = time.time() - t0
+        ppl = perplexity(model, params, prompts)
+        results[impl] = (out, ppl, dt)
+        print(f"[{impl:<9}] generated {out.shape} in {dt:.2f}s "
+              f"(prefill+{args.new_tokens} steps)  prompt ppl {ppl:.4f}")
+
+    exact_out, exact_ppl, _ = results["exact"]
+    print("\n== score-oriented serving: deviation from the exact datapath ==")
+    for impl in ("gn", "softermax"):
+        out, ppl, _ = results[impl]
+        tok_match = float((out == exact_out).mean())
+        dppl = 100.0 * (ppl - exact_ppl) / exact_ppl
+        print(f"  {impl:<9} token match {tok_match*100:5.1f}%   ppl drift {dppl:+.3f}%")
+    print("\n(rank-oriented greedy argmax tolerates approximation; the ppl drift —")
+    print(" the score-oriented metric — is where unnormalized baselines degrade.)")
+
+
+if __name__ == "__main__":
+    main()

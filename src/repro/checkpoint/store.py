@@ -1,0 +1,115 @@
+"""Checkpoint store: atomic npz shards + JSON manifest, with elastic restore.
+
+Arrays are saved *logically* (fully replicated host values), so a checkpoint
+written on one mesh restores onto any other mesh shape — `restore_sharded`
+re-device_puts every leaf under the target sharding.  Writes are atomic
+(tmp dir + rename) so a crash mid-save never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[name] = leaf
+    return out
+
+
+def save(path: str | Path, step: int, tree, extra: dict | None = None) -> Path:
+    """Atomically write checkpoint ``step`` under ``path``."""
+    path = Path(path)
+    final = path / f"step_{step:08d}"
+    tmp = path / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    arrays = {}
+    dtypes = {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype)
+        if a.dtype.kind == "V" or a.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # npz can't serialize ml_dtypes natively: store raw bits
+            a = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+        arrays[k] = a
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # prune stale tmp dirs from crashed saves
+    for stale in path.glob(".tmp_step_*"):
+        shutil.rmtree(stale, ignore_errors=True)
+    return final
+
+
+def latest_step(path: str | Path) -> int | None:
+    path = Path(path)
+    if not path.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in path.glob("step_*") if p.is_dir()
+    )
+    return steps[-1] if steps else None
+
+
+def restore(path: str | Path, step: int, like) -> tuple:
+    """Restore into the structure of ``like`` (pytree of arrays/structs).
+
+    Returns (tree, manifest).  Leaf order is matched by flattened path name.
+    """
+    path = Path(path) / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    names = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+        for path_, _ in leaves_with_paths
+    ]
+    dtypes = manifest.get("dtypes", {})
+    import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
+
+    vals = []
+    for n in names:
+        a = data[n]
+        want = dtypes.get(n)
+        if want and str(a.dtype) != want:
+            a = a.view(np.dtype(want))  # undo the raw-bits encoding
+        vals.append(a)
+    return jax.tree_util.tree_unflatten(treedef, vals), manifest
+
+
+def restore_sharded(path, step, like, shardings):
+    """Elastic restore: place every leaf under the target mesh's sharding.
+
+    ``shardings`` is a pytree of NamedSharding parallel to ``like`` (or None
+    for single-device).  The checkpoint may have been written on a different
+    mesh — arrays are logical, so this is a pure re-placement.
+    """
+    tree, manifest = restore(path, step, like)
+    if shardings is None:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    else:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, manifest

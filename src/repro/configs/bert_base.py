@@ -1,0 +1,4 @@
+"""--arch bert-base (see registry.py for the exact published config)."""
+from repro.configs.registry import BERT_BASE as CONFIG
+
+__all__ = ["CONFIG"]

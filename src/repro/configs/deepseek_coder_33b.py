@@ -1,0 +1,4 @@
+"""--arch deepseek-coder-33b (see registry.py for the exact published config)."""
+from repro.configs.registry import DEEPSEEK_CODER_33B as CONFIG
+
+__all__ = ["CONFIG"]

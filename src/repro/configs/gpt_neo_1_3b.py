@@ -1,0 +1,4 @@
+"""--arch gpt-neo-1.3b (see registry.py for the exact published config)."""
+from repro.configs.registry import GPT_NEO_1_3B as CONFIG
+
+__all__ = ["CONFIG"]

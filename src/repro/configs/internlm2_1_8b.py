@@ -1,0 +1,4 @@
+"""--arch internlm2-1.8b (see registry.py for the exact published config)."""
+from repro.configs.registry import INTERNLM2_1_8B as CONFIG
+
+__all__ = ["CONFIG"]

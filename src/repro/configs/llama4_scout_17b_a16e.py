@@ -1,0 +1,4 @@
+"""--arch llama4-scout-17b-a16e (see registry.py for the exact published config)."""
+from repro.configs.registry import LLAMA4_SCOUT as CONFIG
+
+__all__ = ["CONFIG"]

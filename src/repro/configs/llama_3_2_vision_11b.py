@@ -1,0 +1,4 @@
+"""--arch llama-3.2-vision-11b (see registry.py for the exact published config)."""
+from repro.configs.registry import LLAMA32_VISION_11B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""--arch minicpm3-4b (see registry.py for the exact published config)."""
+from repro.configs.registry import MINICPM3_4B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""--arch mixtral-8x22b (see registry.py for the exact published config)."""
+from repro.configs.registry import MIXTRAL_8X22B as CONFIG
+
+__all__ = ["CONFIG"]

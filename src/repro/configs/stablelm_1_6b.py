@@ -1,0 +1,4 @@
+"""--arch stablelm-1.6b (see registry.py for the exact published config)."""
+from repro.configs.registry import STABLELM_1_6B as CONFIG
+
+__all__ = ["CONFIG"]

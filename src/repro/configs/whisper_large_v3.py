@@ -1,0 +1,4 @@
+"""--arch whisper-large-v3 (see registry.py for the exact published config)."""
+from repro.configs.registry import WHISPER_LARGE_V3 as CONFIG
+
+__all__ = ["CONFIG"]

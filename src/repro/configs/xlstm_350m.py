@@ -1,0 +1,4 @@
+"""--arch xlstm-350m (see registry.py for the exact published config)."""
+from repro.configs.registry import XLSTM_350M as CONFIG
+
+__all__ = ["CONFIG"]

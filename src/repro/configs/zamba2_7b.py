@@ -1,0 +1,4 @@
+"""--arch zamba2-7b (see registry.py for the exact published config)."""
+from repro.configs.registry import ZAMBA2_7B as CONFIG
+
+__all__ = ["CONFIG"]

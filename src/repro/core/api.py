@@ -1,0 +1,49 @@
+"""Public dispatch API: pick softmax/norm implementations by name.
+
+Models take ``softmax_impl`` / ``norm_impl`` strings in their config, so the
+paper's technique (and every baseline) is a first-class configuration axis.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core import baselines
+from repro.core.gn_layernorm import (
+    exact_layernorm,
+    exact_rmsnorm,
+    gn_layernorm,
+    gn_layernorm_hwsim,
+    gn_rmsnorm,
+)
+from repro.core.gn_softmax import exact_softmax, gn_softmax, gn_softmax_hwsim
+
+
+def get_softmax(name: str) -> Callable:
+    table = {
+        "exact": exact_softmax,
+        "gn": gn_softmax,
+        "gn_hwsim": gn_softmax_hwsim,
+        "softermax": baselines.softermax,
+        "pseudo": baselines.pseudo_softmax,
+        "log_domain": baselines.log_domain_softmax,
+    }
+    if name not in table:
+        raise KeyError(f"unknown softmax impl {name!r}; have {sorted(table)}")
+    return table[name]
+
+
+def get_norm(name: str) -> Callable:
+    """Norm fns with signature (x, gamma=None, beta=None) -> y."""
+    table = {
+        "exact_ln": exact_layernorm,
+        "gn_ln": gn_layernorm,
+        "gn_ln_hwsim": gn_layernorm_hwsim,
+        "exact_rms": lambda x, gamma=None, beta=None: exact_rmsnorm(x, gamma),
+        "gn_rms": lambda x, gamma=None, beta=None: gn_rmsnorm(x, gamma),
+        "integer_ln": baselines.integer_layernorm,
+        "lut_ln": baselines.lut_layernorm,
+        "rmsnorm": lambda x, gamma=None, beta=None: baselines.rmsnorm(x, gamma),
+    }
+    if name not in table:
+        raise KeyError(f"unknown norm impl {name!r}; have {sorted(table)}")
+    return table[name]

@@ -1,0 +1,172 @@
+"""Prior-work approximation baselines the paper compares against.
+
+These are *rank-oriented* designs: they preserve ordering but break the
+normalization (sum p != 1 for softmax, sigma != 1 for LN), which is exactly
+what Table II / Fig. 5 of the paper measure.  Each is implemented faithfully
+enough to reproduce its characteristic normalization error:
+
+* :func:`softermax`        — Softermax [5]: base-2 exponential, low-precision
+                             running (online) denominator.
+* :func:`pseudo_softmax`   — pseudo-softmax [6]: 2^(x_i - sum-based offset),
+                             no true normalization.
+* :func:`log_domain_softmax` — Sole [4]-style: log-sum-exp with a LUT'd
+                             log2(1+t) correction, probabilities re-exponentiated
+                             with the base-2 LUT (unnormalized).
+* :func:`integer_layernorm`— dynamic-quantization integer LN [16]-style: the
+                             1/sigma factor is snapped to a power of two.
+* :func:`lut_layernorm`    — [15]-style: 1/sigma from a coarse LUT on var.
+* :func:`rmsnorm`          — RMSNorm [7] (exact, but sigma!=1 w.r.t. LN since
+                             the mean is not removed).
+
+All operate over the last axis and are jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOG2E = 1.4426950408889634
+
+
+def _quantize_unsigned(x, bits: int):
+    """Round x in [0, 1] to ``bits`` fractional bits (truncating, like HW)."""
+    s = float(1 << bits)
+    return jnp.floor(x * s) / s
+
+
+def softermax(x: jax.Array, frac_bits: int = 8) -> jax.Array:
+    """Softermax: p_i = 2^(x_i - m) / sum 2^(x_j - m), low-precision terms.
+
+    Base-2 replaces e^x (cheap shifter in HW).  Terms and the running sum are
+    quantized to ``frac_bits`` fixed point, and the final division uses the
+    quantized sum — the result is order-preserving but NOT normalized in the
+    e^x sense, and its low-precision sum leaves |1-sum p| ~ 2^-frac_bits * N.
+    """
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    t = _quantize_unsigned(jnp.exp2(x32 - m), frac_bits)
+    z = jnp.sum(t, axis=-1, keepdims=True)
+    # reciprocal also in low precision (one Newton step from a 2^-k guess)
+    z_q = jnp.maximum(z, 1.0 / (1 << frac_bits))
+    p = t / z_q
+    # output register truncation
+    p = _quantize_unsigned(p, frac_bits)
+    return p.astype(x.dtype)
+
+
+def pseudo_softmax(x: jax.Array) -> jax.Array:
+    """pseudo-softmax [6]: base-2 with the sum replaced by an exponent hack.
+
+    p_i = 2^(x_i*log2e - A) where A = log2(sum 2^(x_j log2e)) is approximated
+    by the *integer* exponent of the accumulated sum (mantissa dropped) —
+    ordering preserved, scores off by the dropped mantissa in [1, 2).
+    """
+    x32 = x.astype(jnp.float32) * LOG2E
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    t = jnp.exp2(x32 - m)
+    z = jnp.sum(t, axis=-1, keepdims=True)
+    # integer exponent of z only (hardware drops the mantissa normalizer)
+    zbits = jax.lax.bitcast_convert_type(z, jnp.int32)
+    zexp = ((zbits >> 23) & 0xFF) - 127
+    p = t * jnp.exp2(-zexp.astype(jnp.float32))
+    return p.astype(x.dtype)
+
+
+def log_domain_softmax(x: jax.Array, lut_bits: int = 4) -> jax.Array:
+    """Sole [4]-style log-domain softmax with LUT'd log2(1+t) correction.
+
+    logsumexp is computed pairwise in log2 domain using max + LUT(log2(1+2^-d))
+    with a 2^lut_bits-entry correction table; probabilities are 2^(x_i - lse)
+    through a coarse base-2 LUT.  Unnormalized: LUT truncation accumulates in
+    the denominator.
+    """
+    x32 = x.astype(jnp.float32) * LOG2E
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    d = m - x32
+    # log2-domain accumulation: lse = m + log2(sum 2^-d); correction LUT'd
+    s = jnp.sum(jnp.exp2(-_quantize_unsigned(jnp.minimum(d, 31.0), 2)), axis=-1, keepdims=True)
+    # coarse log2 via exponent + LUT on top mantissa bits
+    sbits = jax.lax.bitcast_convert_type(s, jnp.int32)
+    sexp = ((sbits >> 23) & 0xFF) - 127
+    mant_idx = (sbits >> (23 - lut_bits)) & ((1 << lut_bits) - 1)
+    # LUT(log2(1+i/2^b)) evaluated at bucket left edge (truncation)
+    lut = jnp.log2(1.0 + jnp.arange(1 << lut_bits, dtype=jnp.float32) / (1 << lut_bits))
+    lse = sexp.astype(jnp.float32) + lut[mant_idx]
+    p = jnp.exp2(-d - lse)
+    return p.astype(x.dtype)
+
+
+def integer_layernorm(x, gamma=None, beta=None) -> jax.Array:
+    """[16]-style dynamic-quant integer LN: 1/sigma snapped to a power of two.
+
+    sigma_hat = 2^round(log2 sigma)  =>  output variance off by up to sqrt(2).
+    """
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True) + 1e-6
+    # round(log2 sigma) = round(0.5*log2 var) via exponent field
+    vbits = jax.lax.bitcast_convert_type(var, jnp.int32)
+    vexp = ((vbits >> 23) & 0xFF) - 127
+    # include top mantissa bit for rounding to nearest exponent
+    mant_top = (vbits >> 22) & 1
+    log2var = vexp + mant_top  # ~round(log2 var)
+    shift = -(log2var.astype(jnp.float32) / 2.0)
+    rstd = jnp.exp2(jnp.round(shift))              # power-of-two reciprocal
+    y = (x32 - mu) * rstd
+    if gamma is not None:
+        y = y * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def lut_layernorm(x, gamma=None, beta=None, lut_bits: int = 6) -> jax.Array:
+    """[15]-style LN: 1/sqrt(var) from a coarse LUT over the var mantissa."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True) + 1e-6
+    vbits = jax.lax.bitcast_convert_type(var, jnp.int32)
+    vexp = ((vbits >> 23) & 0xFF) - 127
+    idx = (vbits >> (23 - lut_bits)) & ((1 << lut_bits) - 1)
+    # LUT(1/sqrt(m)) at bucket LEFT edge (truncating LUT, per [15])
+    m_edge = 1.0 + jnp.arange(1 << lut_bits, dtype=jnp.float32) / (1 << lut_bits)
+    lut = 1.0 / jnp.sqrt(m_edge)
+    e_half = vexp >> 1
+    odd = (vexp & 1).astype(jnp.float32)
+    pow2 = jnp.exp2(-e_half.astype(jnp.float32))
+    rstd = lut[idx] * pow2 * jnp.where(odd > 0, jnp.float32(2.0 ** -0.5), 1.0)
+    y = (x32 - mu) * rstd
+    if gamma is not None:
+        y = y * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm(x, gamma=None, eps: float = 1e-6) -> jax.Array:
+    """Exact RMSNorm [7] — no mean subtraction."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(ms + eps)
+    if gamma is not None:
+        y = y * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+SOFTMAX_IMPLS = {
+    "exact": None,        # filled by api.py to avoid circular import
+    "gn": None,
+    "gn_hwsim": None,
+    "softermax": softermax,
+    "pseudo": pseudo_softmax,
+    "log_domain": log_domain_softmax,
+}
+
+NORM_IMPLS = {
+    "exact_ln": None,
+    "gn_ln": None,
+    "gn_rms": None,
+    "integer_ln": integer_layernorm,
+    "lut_ln": lut_layernorm,
+    "rmsnorm": rmsnorm,
+}

@@ -1,0 +1,117 @@
+"""LUT construction for the GN-Softmax / GN-LayerNorm approximation units.
+
+The paper (Sec. III-C) uses two exponential LUTs with radix R=8:
+  * coarse LUT, 7 entries:  CLUT[k] = e^{-R * k * s},  k = 0..6
+  * residual LUT          :  RLUT[j] = e^{-j * s},      j = 0..R*2^f - 1
+where ``s = 2^-f`` is the fixed-point step of the stabilized input Δ and the
+factorization  e^{-Δ} = CLUT[Δ_int >> (3+f)] * RLUT[Δ_int & (R*2^f - 1)]
+is *exact* in the integer domain (Eq. 4) — approximation error comes only from
+(a) quantizing Δ to the grid and (b) fixed-point rounding of LUT entries.
+
+Paper-faithful configuration: f=0 (INT Δ) -> 8-entry residual LUT.
+TPU default: f=3 -> 64-entry residual LUT (VMEM entries are ~free; this is a
+beyond-paper accuracy knob recorded in EXPERIMENTS.md).
+
+CoRN-LN (Sec. III-D): Newton reciprocal-sqrt with an LOD initial guess that we
+refine with a small mantissa LUT (the "compressed" table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+RADIX = 8  # paper's R
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxLUTConfig:
+    """Configuration of the two-LUT exponential unit."""
+
+    frac_bits: int = 0        # f: fractional bits of the Δ grid (paper: 0)
+    coarse_entries: int = 7   # paper: 7 (e^{-8*6} already ~0 in Q1.15)
+    lut_value_bits: int = 15  # Q1.15 LUT entries (paper: fixed-point 16)
+    delta_scale: float = 1.0  # s0: logit units per integer step (quant scale)
+
+    @property
+    def residual_entries(self) -> int:
+        return RADIX * (1 << self.frac_bits)
+
+    @property
+    def step(self) -> float:
+        """Δ units represented by one integer step."""
+        return self.delta_scale / (1 << self.frac_bits)
+
+    @property
+    def max_delta_int(self) -> int:
+        """Largest representable Δ index (saturation point)."""
+        return self.coarse_entries * self.residual_entries - 1
+
+
+PAPER_SOFTMAX_LUT = SoftmaxLUTConfig(frac_bits=0)
+TPU_SOFTMAX_LUT = SoftmaxLUTConfig(frac_bits=3)
+
+
+@functools.lru_cache(maxsize=32)
+def exp_luts(cfg: SoftmaxLUTConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Build (coarse, residual) LUTs as float32 (already fixed-point-rounded).
+
+    Entries are rounded to ``lut_value_bits`` fractional bits, exactly what the
+    ROM would store, then returned as float for use in either the float
+    datapath or (times 2^bits) the integer datapath.
+    """
+    scale = float(1 << cfg.lut_value_bits)
+    k = np.arange(cfg.coarse_entries, dtype=np.float64)
+    # Coarse stride in Δ units is RADIX * step * 2^f == RADIX * delta_scale.
+    coarse = np.exp(-float(RADIX) * cfg.delta_scale * k)
+    j = np.arange(cfg.residual_entries, dtype=np.float64)
+    residual = np.exp(-j * cfg.step)
+    coarse_q = np.round(coarse * scale) / scale
+    residual_q = np.round(residual * scale) / scale
+    return coarse_q.astype(np.float32), residual_q.astype(np.float32)
+
+
+def exp_luts_int(cfg: SoftmaxLUTConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Integer (Q1.f) LUT entries for the bit-accurate hw-sim datapath."""
+    coarse, residual = exp_luts(cfg)
+    scale = float(1 << cfg.lut_value_bits)
+    return (
+        np.round(coarse * scale).astype(np.int32),
+        np.round(residual * scale).astype(np.int32),
+    )
+
+
+# --- CoRN-LN rsqrt mantissa LUT ----------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RsqrtConfig:
+    """LOD + mantissa-LUT initial guess, then ``iters`` NR-rsqrt steps."""
+
+    mantissa_bits: int = 5   # 32-entry compressed LUT (64 bytes of ROM)
+    iters: int = 2           # paper: 2-cycle Newton
+    lut_value_bits: int = 16
+
+
+# 2 Newton cycles from a 32-entry mantissa LUT leave |1-sigma| < 2e-8 —
+# matching the paper's "100% of LN errors below 0.2e-6" (Fig. 5).
+PAPER_RSQRT = RsqrtConfig(mantissa_bits=5, iters=2)
+
+
+@functools.lru_cache(maxsize=32)
+def rsqrt_mantissa_lut(cfg: RsqrtConfig) -> np.ndarray:
+    """LUT[i] ~= 1/sqrt(m) for mantissa bucket m in [1 + i/2^b, 1 + (i+1)/2^b).
+
+    Entry is evaluated at the bucket midpoint and rounded to the LUT's
+    fixed-point precision — this is the compressed CoRN table.
+    """
+    n = 1 << cfg.mantissa_bits
+    i = np.arange(n, dtype=np.float64)
+    mid = 1.0 + (i + 0.5) / n
+    vals = 1.0 / np.sqrt(mid)
+    scale = float(1 << cfg.lut_value_bits)
+    return (np.round(vals * scale) / scale).astype(np.float32)
+
+
+# sqrt(1/2) constant for odd-exponent correction, fixed-point rounded.
+INV_SQRT2 = float(np.round((2.0 ** -0.5) * (1 << 16)) / (1 << 16))

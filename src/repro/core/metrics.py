@@ -1,0 +1,36 @@
+"""Normalization-error metrics (paper Sec. II-A, Fig. 5).
+
+normalization error := |1 - sum p|   (softmax)
+                       |1 - sigma|   (layernorm output std)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def softmax_norm_error(p) -> jnp.ndarray:
+    """Per-row |1 - sum p| over the last axis."""
+    return jnp.abs(1.0 - jnp.sum(p.astype(jnp.float32), axis=-1))
+
+
+def layernorm_norm_error(y) -> jnp.ndarray:
+    """Per-row |1 - std(y)| over the last axis (pre-gamma/beta output)."""
+    std = jnp.std(y.astype(jnp.float32), axis=-1)
+    return jnp.abs(1.0 - std)
+
+
+def error_histogram(err: np.ndarray, edges=None) -> dict:
+    """Fig.-5-style distribution summary of normalization errors."""
+    err = np.asarray(err, dtype=np.float64).ravel()
+    if edges is None:
+        edges = [0.0, 0.2e-6, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, np.inf]
+    counts, _ = np.histogram(err, bins=edges)
+    frac = counts / max(err.size, 1)
+    return {
+        "edges": [float(e) for e in edges],
+        "fraction": [float(f) for f in frac],
+        "mean": float(err.mean()) if err.size else 0.0,
+        "max": float(err.max()) if err.size else 0.0,
+        "frac_below_0.2e-6": float((err < 0.2e-6).mean()) if err.size else 0.0,
+    }

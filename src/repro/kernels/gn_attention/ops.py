@@ -1,0 +1,62 @@
+"""Jit'd public wrapper for GN flash attention (padding + GQA plumbing)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT
+from repro.kernels.gn_attention.kernel import gn_attention_pallas
+
+LANE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "causal", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def gn_attention(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, D)
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+    causal: bool = False,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if sm_scale is None:
+        sm_scale = d**-0.5  # scale uses the TRUE head dim, not the padded one
+
+    block_q = min(block_q, _round_up(sq, 8))
+    block_k = min(block_k, _round_up(sk, 8))
+    sq_p = _round_up(sq, block_q)
+    sk_p = _round_up(sk, block_k)
+    d_p = _round_up(d, LANE)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, d_p - d)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, d_p - d)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, d_p - d)))
+
+    out = gn_attention_pallas(
+        qp,
+        kp,
+        vp,
+        cfg=cfg,
+        causal=causal,
+        sm_scale=float(sm_scale),
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+        seq_q_valid=sq,
+        seq_k_valid=sk,
+    )
+    return out[:, :, :sq, :d]

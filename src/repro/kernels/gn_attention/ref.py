@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the GN flash-attention kernel.
+
+Semantics: scaled dot-product attention whose softmax is the paper's
+GN-Softmax (two-LUT factorized exp on the Δ grid + renormalization by the
+true sum).  Because the kernel accumulates the *same* LUT'd numerators into
+both the weighted value sum and the denominator, it equals this reference up
+to float associativity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT
+from repro.kernels.gn_softmax.ref import gn_softmax_ref
+
+
+def gn_attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, H, Sk, D)  (kv heads already broadcast to H)
+    v: jax.Array,  # (B, H, Sk, D)
+    causal: bool = False,
+    sm_scale: float | None = None,
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+) -> jax.Array:
+    if sm_scale is None:
+        sm_scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = gn_softmax_ref(s, cfg)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

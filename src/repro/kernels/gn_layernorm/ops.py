@@ -1,0 +1,65 @@
+"""Jit'd public wrapper for the GN-LayerNorm Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luts import PAPER_RSQRT, RsqrtConfig
+from repro.kernels.gn_layernorm.kernel import gn_layernorm_pallas
+
+LANE = 128
+SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "block_rows", "interpret", "subtract_mean")
+)
+def gn_layernorm(
+    x: jax.Array,
+    gamma: jax.Array | None = None,
+    beta: jax.Array | None = None,
+    cfg: RsqrtConfig = PAPER_RSQRT,
+    block_rows: int = 256,
+    interpret: bool = False,
+    subtract_mean: bool = True,
+) -> jax.Array:
+    """GN-LayerNorm over the last axis of an arbitrarily-shaped array."""
+    orig_shape = x.shape
+    cols = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, cols)
+    if gamma is None:
+        gamma = jnp.ones((cols,), jnp.float32)
+    if beta is None:
+        beta = jnp.zeros((cols,), jnp.float32)
+
+    cols_p = _round_up(cols, LANE)
+    block_rows = min(block_rows, _round_up(rows, SUBLANE))
+    rows_p = _round_up(rows, block_rows)
+    x2 = jnp.pad(x2, ((0, rows_p - rows), (0, cols_p - cols)))
+    g2 = jnp.pad(gamma.reshape(1, cols), ((0, 0), (0, cols_p - cols)))
+    b2 = jnp.pad(beta.reshape(1, cols), ((0, 0), (0, cols_p - cols)))
+    out = gn_layernorm_pallas(
+        x2,
+        g2,
+        b2,
+        cfg=cfg,
+        block_rows=block_rows,
+        interpret=interpret,
+        valid_cols=cols,
+        subtract_mean=subtract_mean,
+    )
+    return out[:rows, :cols].reshape(orig_shape)
+
+
+def gn_rmsnorm(x, gamma=None, cfg: RsqrtConfig = PAPER_RSQRT, **kw):
+    """sigma-guaranteed RMSNorm via the same kernel (mean path off)."""
+    return gn_layernorm(x, gamma, None, cfg=cfg, subtract_mean=False, **kw)

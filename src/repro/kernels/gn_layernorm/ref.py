@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the GN-LayerNorm (CoRN-LN) Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gn_layernorm import newton_rsqrt
+from repro.core.luts import PAPER_RSQRT, RsqrtConfig
+
+
+def gn_layernorm_ref(
+    x: jax.Array,
+    gamma: jax.Array | None = None,
+    beta: jax.Array | None = None,
+    cfg: RsqrtConfig = PAPER_RSQRT,
+    subtract_mean: bool = True,
+) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if subtract_mean:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        centered = x32 - mu
+    else:
+        centered = x32
+    var = jnp.mean(jnp.square(centered), axis=-1, keepdims=True)
+    rstd = newton_rsqrt(var + 1e-8, cfg)
+    y = centered * rstd
+    if gamma is not None:
+        y = y * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,52 @@
+"""Jit'd public wrapper for the GN-Softmax Pallas kernel.
+
+Handles arbitrary leading dims, lane padding to 128 and row padding to the
+block size, then dispatches to the kernel.  ``interpret=True`` runs the kernel
+body in Python on CPU (how this container validates it); on a real TPU the
+same code compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT
+from repro.kernels.gn_softmax.kernel import gn_softmax_pallas
+
+LANE = 128
+SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_rows", "interpret"))
+def gn_softmax(
+    x: jax.Array,
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """GN-Softmax over the last axis of an arbitrarily-shaped array."""
+    orig_shape = x.shape
+    cols = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, cols)
+
+    cols_p = _round_up(cols, LANE)
+    block_rows = min(block_rows, _round_up(rows, SUBLANE))
+    rows_p = _round_up(rows, block_rows)
+    x2 = jnp.pad(
+        x2,
+        ((0, rows_p - rows), (0, cols_p - cols)),
+        constant_values=-1e30,  # padding lanes never win the max
+    )
+    out = gn_softmax_pallas(
+        x2, cfg=cfg, block_rows=block_rows, interpret=interpret, valid_cols=cols
+    )
+    return out[:rows, :cols].reshape(orig_shape)

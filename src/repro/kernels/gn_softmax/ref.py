@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the GN-Softmax Pallas kernel.
+
+Semantics: row-wise Algorithm 1 over the last axis, float-faithful datapath.
+This must match ``kernel.py`` bit-for-bit up to float associativity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT, exp_luts
+
+
+def gn_softmax_ref(x: jax.Array, cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT) -> jax.Array:
+    """Reference: stabilize -> two-LUT factorized exp -> renormalize."""
+    coarse_np, residual_np = exp_luts(cfg)
+    coarse = jnp.asarray(coarse_np)
+    residual = jnp.asarray(residual_np)
+
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    m = jnp.ceil(m / cfg.step) * cfg.step    # grid-snapped stabilizer
+    delta = jnp.maximum(m - x32, 0.0)
+    d_int = jnp.round(delta / cfg.step).astype(jnp.int32)
+    d_int = jnp.clip(d_int, 0, cfg.max_delta_int)
+    frac = d_int >> (3 + cfg.frac_bits)
+    rem = d_int & (cfg.residual_entries - 1)
+    y = coarse[frac] * residual[rem]
+    scale = float(1 << cfg.lut_value_bits)
+    y = jnp.round(y * scale) / scale
+    z = jnp.sum(y, axis=-1, keepdims=True)
+    return (y / z).astype(x.dtype)

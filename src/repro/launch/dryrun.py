@@ -1,0 +1,218 @@
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before any jax import: the dry-run (and ONLY the
+# dry-run) builds the 512-chip production mesh out of host platform devices.
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioner accepts it),
+  * the per-device program fits (memory_analysis),
+  * and extracts the roofline terms (cost_analysis + HLO collective bytes).
+
+Results are written incrementally to experiments/dryrun/<cell>.json so the
+run is resumable; benchmarks/roofline_table.py renders EXPERIMENTS.md tables
+from them.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod both|single|multi]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import ShapeConfig, shapes_for_arch
+from repro.configs.registry import (
+    ASSIGNED_ARCHS,
+    get_config,
+    input_logical_axes,
+    input_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import make_model
+from repro.parallel.sharding import SP_OVERRIDES, current_ctx, use_sharding
+from repro.roofline.analysis import analyze, model_flops_for
+from repro.train.loop import make_train_step
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+
+def _sds_with_sharding(struct_tree, axes_tree):
+    """Attach NamedShardings (from logical axes) to ShapeDtypeStructs."""
+    ctx = current_ctx()
+
+    def one(s, ax):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ctx.sharding_for_shape(s.shape, tuple(ax)))
+
+    return jax.tree.map(
+        one, struct_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _param_structs_sharded(model):
+    from repro.models.layers import ParamSpec
+    from repro.parallel.sharding import current_ctx
+
+    ctx = current_ctx()
+    specs = model.param_specs()
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape,
+            jax.numpy.dtype(s.dtype),
+            sharding=ctx.sharding_for_shape(s.shape, s.logical_axes),
+        ),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _opt_structs(params_sds, state_dtype="float32"):
+    """Optimizer-state structs mirroring the param shardings."""
+    import jax.numpy as jnp
+
+    sdt = jnp.dtype(state_dtype)
+    mk = lambda s: jax.ShapeDtypeStruct(s.shape, sdt, sharding=s.sharding)
+    return {
+        "m": jax.tree.map(mk, params_sds),
+        "v": jax.tree.map(mk, params_sds),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def lower_cell(arch: str, shape: ShapeConfig, multi_pod: bool):
+    """Returns (lowered, n_chips, model_flops)."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    overrides = SP_OVERRIDES if shape.name == "long_500k" else None
+
+    with use_sharding(mesh, overrides):
+        model = make_model(cfg)
+        params_sds = _param_structs_sharded(model)
+        in_sds = _sds_with_sharding(
+            input_specs(cfg, shape), input_logical_axes(cfg, shape)
+        )
+
+        with mesh:
+            if shape.kind == "train":
+                opt_cfg = OptimizerConfig(state_dtype=cfg.opt_state_dtype)
+                step = make_train_step(model, opt_cfg, microbatches=cfg.microbatches)
+                opt_sds = _opt_structs(params_sds, cfg.opt_state_dtype)
+                lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                    params_sds, opt_sds, in_sds
+                )
+            elif shape.kind == "prefill":
+                fn = functools.partial(model.prefill, max_seq=shape.seq_len)
+                lowered = jax.jit(fn).lower(params_sds, in_sds)
+            else:  # decode
+                lowered = jax.jit(model.decode_step, donate_argnums=(1,)).lower(
+                    params_sds, in_sds["cache"], in_sds["token"], in_sds["pos"]
+                )
+    return lowered, n_chips, model_flops_for(cfg, shape)
+
+
+def run_cell(arch: str, shape: ShapeConfig, multi_pod: bool, outdir: Path) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape.name}__{mesh_name}"
+    out_path = outdir / f"{cell}.json"
+    t0 = time.time()
+    rec: dict = {"arch": arch, "shape": shape.name, "mesh": mesh_name, "ok": False}
+    try:
+        lowered, n_chips, mflops = lower_cell(arch, shape, multi_pod)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        roof = analyze(compiled, n_chips, mflops, hlo_text=hlo_text)
+        from repro.roofline.hlo_cost import collective_bytes as coll_bytes_scaled
+
+        coll = coll_bytes_scaled(hlo_text)
+        # XLA's own (loop-body-counted-once) numbers, kept for reference
+        xla_cost = compiled.cost_analysis()
+        if isinstance(xla_cost, list):
+            xla_cost = xla_cost[0]
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+            collective_bytes=coll,
+            roofline=roof.to_dict(),
+            xla_cost_naive={
+                "flops": float(xla_cost.get("flops", 0.0)),
+                "bytes_accessed": float(xla_cost.get("bytes accessed", 0.0)),
+            },
+        )
+        print(
+            f"[ok] {cell}: compile {t2-t1:.1f}s  "
+            f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB  "
+            f"bottleneck={roof.bottleneck}  "
+            f"terms(c/m/coll)={roof.compute_s:.4f}/{roof.memory_s:.4f}/{roof.collective_s:.4f}s",
+            flush=True,
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {cell}: {rec['error'][:300]}", flush=True)
+    outdir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.outdir)
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else (args.arch,)
+    meshes = {"single": (False,), "multi": (True,), "both": (False, True)}[
+        args.multi_pod
+    ]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes_for_arch(arch):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                if (
+                    args.skip_existing
+                    and (outdir / f"{arch}__{shape.name}__{mesh_name}.json").exists()
+                ):
+                    prev = json.loads(
+                        (outdir / f"{arch}__{shape.name}__{mesh_name}.json").read_text()
+                    )
+                    if prev.get("ok"):
+                        n_ok += 1
+                        continue
+                rec = run_cell(arch, shape, mp, outdir)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

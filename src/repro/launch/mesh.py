@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips of a
+v5e pod.  Multi-pod: a leading 'pod' axis, (2, 16, 16) = 512 chips; the pod
+axis carries pure data parallelism + gradient all-reduce and is the axis that
+scales to 1000+ nodes (the per-pod mesh never changes).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale integration tests (host platform devices)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,54 @@
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run 'profiler': loop-scaled per-instruction flops/bytes attribution.
+
+This is the hillclimb tool: it shows which model ops own the dominant
+roofline term of a compiled (arch x shape x mesh) cell.
+
+  python -m repro.launch.profile_cell --arch mixtral-8x22b --shape train_4k
+"""
+import argparse
+
+from repro.configs.base import shapes_for_arch
+from repro.launch.dryrun import lower_cell
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+from repro.roofline.hlo_cost import cost_breakdown, module_cost
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    shape = next(s for s in shapes_for_arch(args.arch) if s.name == args.shape)
+    lowered, n_chips, mflops = lower_cell(args.arch, shape, args.multi_pod)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    cost = module_cost(text)
+    print(f"== {args.arch} x {args.shape} ({n_chips} chips) ==")
+    print(f"flops/device: {cost.flops:.3e}  ({cost.flops/PEAK_FLOPS:.3f}s)")
+    print(f"bytes/device: {cost.bytes:.3e}  ({cost.bytes/HBM_BW:.3f}s)")
+    print(f"collective:   {cost.collective_total:.3e} B")
+    bd = cost_breakdown(text, top_k=args.top)
+    print(f"\n-- top {args.top} by bytes --")
+    for desc, b in bd["by_bytes"]:
+        print(f"  {b:14.3e}  {desc[:140]}")
+    print(f"\n-- top {args.top} by flops --")
+    for desc, f in bd["by_flops"]:
+        print(f"  {f:14.3e}  {desc[:140]}")
+    mem = compiled.memory_analysis()
+    print(
+        f"\nmemory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+        f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+        f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB"
+    )
+
+
+if __name__ == "__main__":
+    main()

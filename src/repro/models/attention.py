@@ -1,0 +1,210 @@
+"""Attention: GQA/MHA (+sliding window), cross-attention, and decode paths.
+
+The softmax is pluggable (``cfg.softmax_impl``) — 'gn' routes through the
+paper's Algorithm 1; baselines and the FP32 oracle are selectable for the
+accuracy experiments.  ``cfg.use_pallas`` switches the training/prefill path
+to the fused GN flash-attention Pallas kernel (single-chip hot path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import get_softmax
+from repro.models.layers import ParamSpec
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "wq": ParamSpec((d, cfg.q_features), ("embed_fsdp", "heads_tp")),
+        "wk": ParamSpec((d, cfg.kv_features), ("embed_fsdp", "heads_tp")),
+        "wv": ParamSpec((d, cfg.kv_features), ("embed_fsdp", "heads_tp")),
+        "wo": ParamSpec((cfg.q_features, d), ("heads_tp", "embed_fsdp")),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask) -> jax.Array:
+    """q: (B,S,H,dh), k/v: (B,T,KV,dh), mask: (B,1,S,T) or (1,1,S,T) bool."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, s, kv, group, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) * (dh**-0.5)
+    scores = scores.astype(jnp.float32)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, NEG_INF)
+    softmax = get_softmax(cfg.softmax_impl)
+    p = softmax(scores).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(b, s, h, dh)
+
+
+def _use_chunked(cfg: ModelConfig, s: int) -> bool:
+    """Chunked (flash-style) attention for long sequences — perf B2 (§Perf).
+
+    The one-pass path materializes (S,T) f32 scores; past ~2k tokens that
+    dominates the memory roofline.  The chunked path requires the GN or exact
+    softmax (baselines are one-pass-only, used in small accuracy studies).
+    """
+    return s > 2048 and cfg.softmax_impl in ("gn", "exact")
+
+
+def causal_mask(s: int, t: int, window: int = 0) -> jax.Array:
+    """(1, 1, s, t) bool; t >= s (query block is the suffix of the kv span)."""
+    rows = jnp.arange(s)[:, None] + (t - s)
+    cols = jnp.arange(t)[None, :]
+    m = cols <= rows
+    if window:
+        m &= cols > rows - window
+    return m[None, None]
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S)
+    causal: bool = True,
+) -> jax.Array:
+    dt = x.dtype
+    b, s, d = x.shape
+    q = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wk"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wv"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cfg.use_pallas:
+        from repro.kernels.gn_attention.ops import gn_attention
+
+        interp = jax.devices()[0].platform != "tpu"
+        out = gn_attention(
+            q.transpose(0, 2, 1, 3),
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            causal=causal,
+            interpret=interp,
+        ).transpose(0, 2, 1, 3)
+    elif _use_chunked(cfg, s):
+        from repro.models.chunked_attention import chunked_self_attention
+
+        out = chunked_self_attention(cfg, q, k, v, causal)
+    else:
+        if causal:
+            mask = causal_mask(s, s, cfg.sliding_window)
+        else:
+            mask = jnp.ones((1, 1, s, s), bool)
+        out = _sdpa(cfg, q, k, v, mask)
+    out = out.reshape(b, s, cfg.q_features)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+
+
+# ------------------------------------------------------------ cross-attn ---
+def cross_attn_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "wq": ParamSpec((d, cfg.q_features), ("embed_fsdp", "heads_tp")),
+        "wk": ParamSpec((d, cfg.kv_features), ("embed_fsdp", "heads_tp")),
+        "wv": ParamSpec((d, cfg.kv_features), ("embed_fsdp", "heads_tp")),
+        "wo": ParamSpec((cfg.q_features, d), ("heads_tp", "embed_fsdp")),
+    }
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x, memory) -> jax.Array:
+    """x: (B,S,D) queries; memory: (B,M,D) encoder/vision states (no rope)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    m = memory.shape[1]
+    q = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(jnp.einsum("bmd,df->bmf", memory.astype(dt), p["wk"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(jnp.einsum("bmd,df->bmf", memory.astype(dt), p["wv"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    mask = jnp.ones((1, 1, s, m), bool)
+    out = _sdpa(cfg, q, k, v, mask).reshape(b, s, cfg.q_features)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+
+
+# ----------------------------------------------------------------- decode ---
+def attn_cache_shape(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    win = cfg.sliding_window or 0
+    slots = min(max_seq, win) if win else max_seq
+    kv = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, jnp.dtype(cfg.dtype)),
+        "v": jax.ShapeDtypeStruct(kv, jnp.dtype(cfg.dtype)),
+    }
+
+
+def attn_prefill(cfg: ModelConfig, p: dict, x, positions):
+    """Run self-attention over the prompt AND return the kv cache to reuse."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    k = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wk"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wv"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)), cfg.n_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    if _use_chunked(cfg, s):
+        from repro.models.chunked_attention import chunked_self_attention
+
+        out = chunked_self_attention(cfg, q, k, v, causal=True).reshape(b, s, cfg.q_features)
+    else:
+        mask = causal_mask(s, s, cfg.sliding_window)
+        out = _sdpa(cfg, q, k, v, mask).reshape(b, s, cfg.q_features)
+    out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+    if cfg.sliding_window and s > cfg.sliding_window:
+        k = k[:, -cfg.sliding_window :]
+        v = v[:, -cfg.sliding_window :]
+    return out, {"k": k, "v": v}
+
+
+def attn_decode_step(cfg: ModelConfig, p: dict, cache: dict, x, pos):
+    """One-token decode.  x: (B,1,D); pos: scalar int32 (current position).
+
+    Full-attention: cache slot ``pos`` is written.  Sliding window: ring
+    buffer slot ``pos % window`` (sub-quadratic memory, the mixtral path).
+    """
+    dt = x.dtype
+    b = x.shape[0]
+    q = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)), cfg.n_heads, cfg.head_dim)
+    k_new = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wk"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wv"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+
+    slots = cache["k"].shape[1]
+    win = cfg.sliding_window or 0
+    slot = (pos % slots) if win else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    idx = jnp.arange(slots)
+    if win:
+        # ring buffer: slot i holds absolute position  i + floor((pos-i)/slots)*slots
+        age = (slot - idx) % slots  # 0 = newest
+        valid = (age < win) & (age <= pos)
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, :]  # (1,1,1,slots)
+
+    kv = cfg.n_kv_heads
+    group = cfg.n_heads // kv
+    qg = q.reshape(b, 1, kv, group, cfg.head_dim)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) * (cfg.head_dim**-0.5)
+    scores = jnp.where(mask[:, :, None], scores.astype(jnp.float32), NEG_INF)
+    from repro.core import get_softmax
+
+    pmat = get_softmax(cfg.softmax_impl)(scores).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", pmat, v).reshape(b, 1, cfg.q_features)
+    out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+    return out, {"k": k, "v": v}

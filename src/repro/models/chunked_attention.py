@@ -1,0 +1,268 @@
+"""Chunked (flash-style) attention with streaming GN-Softmax — perf B2.
+
+Why (EXPERIMENTS.md §Perf, cell B): the one-pass ``_sdpa`` materializes the
+full (B,KV,G,S,T) float32 score tensor — 1.2e15 bytes/device on the deepseek
+prefill_32k cell, plus a partitioner-inserted all-reduce over that tensor.
+This module never materializes more than a (.., S_q, kv_chunk) tile.
+
+The GN (guaranteed-normalization) softmax survives streaming exactly:
+
+  * the stabilizer is the running max *snapped up to the Δ grid* — identical
+    to the one-pass ``gn_softmax`` stabilizer once all chunks are seen;
+  * every exponential — numerators AND the rescale of previous partial sums —
+    goes through the paper's two-LUT factorized exp (``factorized_exp_ste``);
+  * the final division is a single reciprocal by the *true accumulated sum of
+    the approximated numerators*, so sum(p) = 1 to one rounding, independent
+    of chunking (test: ``attention of constant v returns that constant``).
+
+Causal attention uses a hierarchical halves decomposition instead of masked
+tiles: at level l the high half of each of 2^l blocks attends the low half
+(an unmasked rectangle, batched over blocks), and only the final ``leaf``-
+sized diagonal blocks pay the triangular masking waste (= leaf/S of total
+flops, ~6% at 2048/32768, vs 100% for naive chunk masking).  Sliding-window
+attention uses a banded q-chunk scan with a static (window + chunk) kv slice.
+
+All shapes here are (B, H, S, dh) with kv-heads already broadcast to H; the
+dispatcher in models/attention.py handles GQA broadcast and layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gn_softmax import factorized_exp_ste
+from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT
+from repro.parallel.sharding import shard
+
+NEG = -1e30
+
+
+def _exp_pair(impl: str, lut_cfg: SoftmaxLUTConfig):
+    """-> (exp_fn(delta >= 0) = approx e^-delta, grid step or None)."""
+    if impl.startswith("gn"):
+        return functools.partial(factorized_exp_ste, cfg=lut_cfg), lut_cfg.step
+    return (lambda d: jnp.exp(-d)), None
+
+
+def _snap_up(m, step):
+    return jnp.ceil(m / step) * step if step else m
+
+
+def _update(state, s, v_c, exp_fn, step, guard: bool = True):
+    """Online-softmax accumulate of one score tile.
+
+    state: (acc (...,Sq,dh) f32, m (...,Sq) f32, z (...,Sq) f32)
+    s: (..., Sq, Kc) f32 scores (masked entries = NEG); v_c: (..., Kc, dh).
+    ``guard=False`` skips the masked-entry zeroing for tiles known to be
+    fully valid (the unmasked hierarchy levels) — perf B3 (§Perf): the
+    redundant select materialized an extra f32 tile per chunk.
+    """
+    acc, m, z = state
+    m_c = _snap_up(jnp.max(s, axis=-1), step)
+    m_new = jnp.maximum(m, m_c)
+    resc = exp_fn(jnp.maximum(m_new - m, 0.0))  # e^-(m_new-m), on-grid
+    y = exp_fn(jnp.maximum(m_new[..., None] - s, 0.0))  # numerators
+    if guard:
+        # masked entries have delta ~ 1e30 -> exp underflows the fixed-point
+        # grid to exactly 0; keep an explicit zero for the float path.
+        y = jnp.where(s <= NEG / 2, 0.0, y)
+    z = z * resc + jnp.sum(y, axis=-1)
+    pv = jnp.einsum(
+        "...qk,...kd->...qd",
+        y.astype(v_c.dtype),
+        v_c,
+        preferred_element_type=jnp.float32,
+    )
+    acc = acc * resc[..., None] + pv
+    return (acc, m_new, z)
+
+
+def _init_state(lead, dh):
+    """lead = q.shape[:-1] (i.e. (..., Sq)); state rows parallel q rows."""
+    return (
+        jnp.zeros((*lead, dh), jnp.float32),
+        jnp.full(lead, NEG, jnp.float32),
+        jnp.zeros(lead, jnp.float32),
+    )
+
+
+def _stream_rect(q, k, v, state, exp_fn, step, kv_chunk, scale, mask_fn=None):
+    """Unmasked (or mask_fn-masked) rectangle: q (...,Sq,dh) x kv (...,T,dh).
+
+    Scans kv in chunks; mask_fn(chunk_idx) -> (Sq, Kc) bool or None.
+    """
+    t = k.shape[-2]
+    kc = min(kv_chunk, t)
+    nk, rem = divmod(t, kc)
+    assert rem == 0, f"kv len {t} % chunk {kc}"
+
+    ks = jnp.moveaxis(k.reshape(*k.shape[:-2], nk, kc, k.shape[-1]), -3, 0)
+    vs = jnp.moveaxis(v.reshape(*v.shape[:-2], nk, kc, v.shape[-1]), -3, 0)
+
+    def body(st, inp):
+        i, k_c, v_c = inp
+        s = jnp.einsum(
+            "...qd,...kd->...qk", q, k_c, preferred_element_type=jnp.float32
+        ) * scale
+        if mask_fn is not None:
+            s = jnp.where(mask_fn(i), s, NEG)
+        return _update(st, s, v_c, exp_fn, step, guard=mask_fn is not None), None
+
+    state, _ = jax.lax.scan(body, state, (jnp.arange(nk), ks, vs))
+    return state
+
+
+def _finalize(state):
+    acc, _, z = state
+    return acc * (1.0 / jnp.maximum(z, 1e-30))[..., None]
+
+
+# ---------------------------------------------------------------- causal ---
+def causal_chunked(
+    q, k, v,
+    *,
+    impl: str = "gn",
+    lut_cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+    kv_chunk: int = 1024,
+    leaf: int = 2048,
+    scale: Optional[float] = None,
+):
+    """Causal self-attention, (B,H,S,dh) -> (B,H,S,dh), hierarchical halves."""
+    b, h, s, dh = q.shape
+    dv = v.shape[-1]  # value head dim may differ (MLA)
+    scale = dh**-0.5 if scale is None else scale
+    exp_fn, step = _exp_pair(impl, lut_cfg)
+    leaf = min(leaf, s)
+    while s % leaf:
+        leaf //= 2
+    kc = min(kv_chunk, leaf)
+
+    state = _init_state(q.shape[:-1], dv)
+
+    # --- diagonal leaves: (B,H,nl,leaf) blocks, causal mask inside ----------
+    nl = s // leaf
+    blk = lambda x: x.reshape(b, h, nl, leaf, x.shape[-1])
+    rows = jnp.arange(leaf)[:, None]
+
+    def leaf_mask(i):  # kv chunk i within the leaf
+        cols = i * kc + jnp.arange(kc)[None, :]
+        return cols <= rows
+
+    acc, m, z = state
+    st_blk = (blk(acc), m.reshape(b, h, nl, leaf), z.reshape(b, h, nl, leaf))
+    st_blk = _stream_rect(
+        blk(q), blk(k), blk(v), st_blk, exp_fn, step, kc, scale, mask_fn=leaf_mask
+    )
+    state = (
+        st_blk[0].reshape(b, h, s, dv),
+        st_blk[1].reshape(b, h, s),
+        st_blk[2].reshape(b, h, s),
+    )
+
+    # --- off-diagonal levels: high half attends low half, batched -----------
+    w = s
+    nb = 1
+    while w > leaf:
+        w2 = w // 2
+        qv = q.reshape(b, h, nb, 2, w2, dh)
+        kv_ = k.reshape(b, h, nb, 2, w2, dh)
+        vv = v.reshape(b, h, nb, 2, w2, dv)
+        acc, m, z = state
+        accv = acc.reshape(b, h, nb, 2, w2, dv)
+        mv = m.reshape(b, h, nb, 2, w2)
+        zv = z.reshape(b, h, nb, 2, w2)
+        st_hi = (accv[:, :, :, 1], mv[:, :, :, 1], zv[:, :, :, 1])
+        st_hi = _stream_rect(
+            qv[:, :, :, 1], kv_[:, :, :, 0], vv[:, :, :, 0],
+            st_hi, exp_fn, step, min(kv_chunk, w2), scale,
+        )
+        acc = jnp.stack([accv[:, :, :, 0], st_hi[0]], axis=3).reshape(b, h, s, dv)
+        m = jnp.stack([mv[:, :, :, 0], st_hi[1]], axis=3).reshape(b, h, s)
+        z = jnp.stack([zv[:, :, :, 0], st_hi[2]], axis=3).reshape(b, h, s)
+        state = (acc, m, z)
+        nb *= 2
+        w = w2
+
+    return _finalize(state)
+
+
+# ---------------------------------------------------------------- window ---
+def windowed_chunked(
+    q, k, v,
+    *,
+    window: int,
+    impl: str = "gn",
+    lut_cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+    q_chunk: int = 1024,
+    scale: Optional[float] = None,
+):
+    """Causal sliding-window attention via a banded q-chunk scan.
+
+    Each q chunk sees a static (window + q_chunk)-wide kv slice of the
+    front-padded sequence — no O(S^2) tiles, ~(q_chunk/(window+q_chunk))
+    masking waste.
+    """
+    b, h, s, dh = q.shape
+    scale = dh**-0.5 if scale is None else scale
+    exp_fn, step = _exp_pair(impl, lut_cfg)
+    qc = min(q_chunk, s)
+    while s % qc:
+        qc //= 2
+    nq = s // qc
+    band = window + qc
+
+    pad = jnp.zeros((b, h, window, dh), k.dtype)
+    kp = jnp.concatenate([pad, k], axis=2)  # position j -> index j + window
+    vp = jnp.concatenate([pad, v], axis=2)
+
+    qs = jnp.moveaxis(q.reshape(b, h, nq, qc, dh), 2, 0)
+
+    def body(_, inp):
+        i, q_c = inp
+        start = i * qc  # kv slice [start, start+band) in padded coords
+        k_c = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=2)
+        v_c = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=2)
+        srow = jnp.einsum(
+            "bhqd,bhkd->bhqk", q_c, k_c, preferred_element_type=jnp.float32
+        ) * scale
+        # global row r = start + qi, global col c = start + ki - window
+        qi = jnp.arange(qc)[:, None]
+        ki = jnp.arange(band)[None, :]
+        col = ki - window  # relative to row block start
+        valid = (col <= qi) & (col > qi - window) & (start + col >= 0)
+        srow = jnp.where(valid, srow, NEG)
+        st = _init_state((b, h, qc), dh)
+        st = _update(st, srow, v_c, exp_fn, step)
+        return None, _finalize(st)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+    return jnp.moveaxis(outs, 0, 2).reshape(b, h, s, dh)
+
+
+# ------------------------------------------------------------- dispatcher ---
+def chunked_self_attention(
+    cfg, q, k, v, causal: bool, lut_cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT
+):
+    """(B,S,H,dh) q + (B,T,KV,dh) kv -> (B,S,H,dh).  GQA broadcast + layout +
+    sharding (flat query heads over the TP axis; small kv replicated)."""
+    bsz, s, hq, dh = q.shape
+    group = hq // k.shape[2]
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    qt = shard(q.transpose(0, 2, 1, 3), "batch", "heads_act", None, None)
+    kt = shard(k.transpose(0, 2, 1, 3), "batch", "heads_act", None, None)
+    vt = shard(v.transpose(0, 2, 1, 3), "batch", "heads_act", None, None)
+    impl = cfg.softmax_impl
+    if causal and cfg.sliding_window and s > cfg.sliding_window:
+        out = windowed_chunked(qt, kt, vt, window=cfg.sliding_window, impl=impl, lut_cfg=lut_cfg)
+    elif causal:
+        out = causal_chunked(qt, kt, vt, impl=impl, lut_cfg=lut_cfg)
+    else:
+        st = _init_state(qt.shape[:-1], dh)
+        st = _stream_rect(qt, kt, vt, st, *_exp_pair(impl, lut_cfg), 1024, dh**-0.5)
+        out = _finalize(st)
+    return out.astype(q.dtype).transpose(0, 2, 1, 3)

@@ -1,0 +1,167 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Q and KV are projected through low-rank latents; the decode cache stores only
+the compressed latent + shared rope key (kv_lora_rank + qk_rope_head_dim per
+token) — MLA's memory win.  Softmax is pluggable exactly as in attention.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import get_softmax
+from repro.models.attention import NEG_INF, causal_mask
+from repro.models.layers import ParamSpec
+from repro.models.rope import apply_rope
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    m = cfg.mla
+    h = cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": ParamSpec((d, m.q_lora_rank), ("embed_fsdp", None)),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), init="ones"),
+        "wq_b": ParamSpec((m.q_lora_rank, h * qk_head), (None, "heads_tp")),
+        "wkv_a": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed_fsdp", None)),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="ones"),
+        "wkv_b": ParamSpec(
+            (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)),
+            (None, "heads_tp"),
+        ),
+        "wo": ParamSpec((h * m.v_head_dim, d), ("heads_tp", "embed_fsdp")),
+    }
+
+
+def _project(cfg: ModelConfig, p: dict, x, positions):
+    """Compute per-head q (nope+rope) and the compressed kv latent."""
+    from repro.core import gn_rmsnorm
+
+    dt = x.dtype
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+
+    q_lat = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+    q_lat = gn_rmsnorm(q_lat, p["q_norm"])
+    q = jnp.einsum("bsr,rf->bsf", q_lat, p["wq_b"].astype(dt))
+    q = q.reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_kv = gn_rmsnorm(kv_a[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = kv_a[..., m.kv_lora_rank :]  # (b, s, rope_dim) shared across heads
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _attend(cfg: ModelConfig, p: dict, q_nope, q_rope, c_kv, k_rope, mask):
+    """Attention against the expanded latent.  c_kv: (b,t,r); k_rope: (b,t,dr)."""
+    dt = q_nope.dtype
+    m = cfg.mla
+    h = cfg.n_heads
+    b, s = q_nope.shape[:2]
+    t = c_kv.shape[1]
+
+    kv = jnp.einsum("btr,rf->btf", c_kv, p["wkv_b"].astype(dt))
+    kv = kv.reshape(b, t, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope = kv[..., : m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim :]
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (
+        jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+        + jnp.einsum("bshd,btd->bhst", q_rope, k_rope)
+    ) * scale
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    pmat = get_softmax(cfg.softmax_impl)(scores).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", pmat, v).reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+
+
+def _attend_chunked(cfg: ModelConfig, p: dict, q_nope, q_rope, c_kv, k_rope):
+    """Streaming (flash) MLA attention — perf B2 applied to MLA (§Perf).
+
+    The score decomposition q_nope.k_nope + q_rope.k_rope folds exactly into
+    one concatenated head dim, so the chunked GN attention applies verbatim:
+    q' = [q_nope | q_rope], k' = [k_nope | k_rope(broadcast)].  Removes the
+    (b,h,s,t) f32 score tensor (minicpm3 prefill_32k: 1063 s -> see §Perf).
+    """
+    from repro.models.chunked_attention import causal_chunked
+
+    dt = q_nope.dtype
+    m = cfg.mla
+    h = cfg.n_heads
+    b, s = q_nope.shape[:2]
+    t = c_kv.shape[1]
+
+    kv = jnp.einsum("btr,rf->btf", c_kv, p["wkv_b"].astype(dt))
+    kv = kv.reshape(b, t, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope = kv[..., : m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim :]
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)  # (b,s,h,dn+dr)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, t, h, k_rope.shape[-1]))],
+        axis=-1,
+    )
+    from repro.parallel.sharding import shard
+
+    qt = shard(qq.transpose(0, 2, 1, 3), "batch", "heads_act", None, None)
+    kt = shard(kk.transpose(0, 2, 1, 3), "batch", "heads_act", None, None)
+    vt = shard(v.transpose(0, 2, 1, 3), "batch", "heads_act", None, None)
+    out = causal_chunked(qt, kt, vt, impl=cfg.softmax_impl, scale=scale)
+    out = out.astype(dt).transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+
+
+def _use_chunked_mla(cfg, s: int) -> bool:
+    return s > 2048 and cfg.softmax_impl in ("gn", "exact")
+
+
+def mla_self_attention(cfg: ModelConfig, p: dict, x, positions, causal=True):
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _project(cfg, p, x, positions)
+    if causal and _use_chunked_mla(cfg, s):
+        return _attend_chunked(cfg, p, q_nope, q_rope, c_kv, k_rope)
+    mask = causal_mask(s, s) if causal else jnp.ones((1, 1, s, s), bool)
+    return _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_seq, m.kv_lora_rank), jnp.dtype(cfg.dtype)),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_seq, m.qk_rope_head_dim), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mla_prefill(cfg: ModelConfig, p: dict, x, positions):
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _project(cfg, p, x, positions)
+    if _use_chunked_mla(cfg, s):
+        out = _attend_chunked(cfg, p, q_nope, q_rope, c_kv, k_rope)
+    else:
+        mask = causal_mask(s, s)
+        out = _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode_step(cfg: ModelConfig, p: dict, cache: dict, x, pos):
+    b = x.shape[0]
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _project(cfg, p, x, posv)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+    )
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+    )
+    t = c_kv.shape[1]
+    mask = (jnp.arange(t) <= pos)[None, None, None, :]
+    out = _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,138 @@
+"""Mixture-of-Experts layer: GShard-style grouped top-k dispatch.
+
+Tokens are partitioned into groups (aligned with the data-parallel sharding),
+each group routes its tokens to experts under a per-group capacity; dispatch
+and combine are one-hot einsums (MXU-friendly, shardable — the expert dim is
+sharded over the 'model' axis, which makes XLA emit the canonical GShard
+all-to-all pattern).
+
+The **router softmax is score-oriented**: its probabilities weight expert
+outputs directly and feed the load-balance loss, so normalization errors bias
+both the mixture and the auxiliary objective — running it through GN-Softmax
+(``cfg.softmax_impl``) is a first-class application of the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import get_softmax
+from repro.models.layers import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    # EP when the expert count divides the production TP width (16); otherwise
+    # tensor-parallel *within* every expert (mixtral: 8 experts, 16-way TP).
+    if e % 16 == 0:
+        wi_ax, wo_ax = ("expert", "embed_fsdp", None), ("expert", None, "embed_fsdp")
+    else:
+        wi_ax, wo_ax = (None, "embed_fsdp", "ff"), (None, "ff", "embed_fsdp")
+    return {
+        "router": ParamSpec((d, e), ("embed_fsdp", None)),
+        "wi": ParamSpec((e, d, f), wi_ax),
+        "wg": ParamSpec((e, d, f), wi_ax),
+        "wo": ParamSpec((e, f, d), wo_ax),
+    }
+
+
+def _top_k(gates: jax.Array, k: int):
+    """Iterative top-k (k<=2 in all assigned archs). gates: (..., E)."""
+    idxs, vals = [], []
+    g = gates
+    for _ in range(k):
+        i = jnp.argmax(g, axis=-1)
+        v = jnp.take_along_axis(g, i[..., None], axis=-1)[..., 0]
+        idxs.append(i)
+        vals.append(v)
+        g = g - jax.nn.one_hot(i, gates.shape[-1], dtype=g.dtype) * 1e9
+    return jnp.stack(idxs, -1), jnp.stack(vals, -1)  # (..., k)
+
+
+def apply_moe(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x: (B, S, D) -> (y, aux) with load-balance + router z metrics."""
+    dt = x.dtype
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    tokens = b * s
+    g_sz = min(m.group_size, tokens)
+    n_groups = tokens // g_sz
+    assert n_groups * g_sz == tokens, (tokens, g_sz)
+    cap = max(int(g_sz * k * m.capacity_factor / e), 1)
+
+    xg = x.reshape(n_groups, g_sz, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(dt)).astype(jnp.float32)
+    gates = get_softmax(cfg.softmax_impl)(logits)  # (g, t, e) score-oriented!
+    idx, val = _top_k(gates, k)  # (g, t, k)
+    # normalize the selected gate mass (mixtral-style)
+    val = val / jnp.maximum(jnp.sum(val, -1, keepdims=True), 1e-9)
+
+    # position-in-expert via cumsum over the group (drop beyond capacity)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (g, t, k, e)
+    # earlier k-choices claim capacity first, then earlier tokens
+    flat = onehot.reshape(n_groups, g_sz * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (g, t*k, e) slots already taken
+    pos = pos.reshape(n_groups, g_sz, k, e)
+    in_cap = (pos < cap) & (onehot > 0)
+    slot = jnp.sum(pos * onehot, -1)  # (g, t, k) capacity slot per choice
+    keep = jnp.any(in_cap, -1)  # (g, t, k)
+
+    if cfg.moe_dispatch == "gather":
+        # Gather/scatter dispatch — perf iteration A3 (§Perf).  The one-hot
+        # dispatch/combine einsums cost 2*g*t*(e*cap)*d flops EACH — as much
+        # as the expert matmuls themselves (~45% of the mixtral train_4k
+        # compute term).  Routing is a permutation, not a matmul: scatter the
+        # kept (token, choice) pairs into their (expert, slot) cells, gather
+        # token embeddings in, gather expert outputs back out.  Identical
+        # math (tests/test_moe_dispatch.py), O(t*k*d) bytes, ~zero flops.
+        tk = g_sz * k
+        dest = jnp.where(keep, idx * cap + slot, e * cap).reshape(n_groups, tk)
+        tok_of = jnp.broadcast_to(
+            jnp.arange(g_sz)[:, None], (g_sz, k)
+        ).reshape(tk)
+        grow = jnp.arange(n_groups)[:, None]
+        src = jnp.zeros((n_groups, e * cap + 1), jnp.int32)
+        src = src.at[grow, dest].set(tok_of[None, :], mode="drop")
+        filled = jnp.zeros((n_groups, e * cap + 1), dt)
+        filled = filled.at[grow, dest].set(1.0, mode="drop")
+        src, filled = src[:, :-1], filled[:, :-1]
+
+        expert_in = jnp.take_along_axis(xg, src[..., None], axis=1)
+        expert_in = (expert_in * filled[..., None]).reshape(n_groups, e, cap, d)
+        h = jnp.einsum("gecd,edf->gecf", expert_in, p["wi"].astype(dt))
+        gate = jnp.einsum("gecd,edf->gecf", expert_in, p["wg"].astype(dt))
+        h = jax.nn.silu(gate) * h
+        expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+
+        flat_out = expert_out.reshape(n_groups, e * cap, d)
+        back = jnp.take_along_axis(
+            flat_out, jnp.minimum(dest, e * cap - 1)[..., None], axis=1
+        ).reshape(n_groups, g_sz, k, d)
+        w = (val.astype(dt) * keep.astype(dt)).reshape(n_groups, g_sz, k)
+        y = jnp.einsum("gtk,gtkd->gtd", w, back)
+    else:  # 'einsum': the GShard one-hot reference path
+        # dispatch/combine one-hots: (g, t, e, cap)
+        slot_oh = jax.nn.one_hot(slot, cap, dtype=dt)  # (g, t, k, cap)
+        exp_oh_d = onehot.astype(dt) * keep[..., None].astype(dt)  # (g, t, k, e)
+        dispatch = jnp.einsum("gtke,gtkc->gtec", exp_oh_d, slot_oh)
+        combine = jnp.einsum("gtke,gtkc,gtk->gtec", exp_oh_d, slot_oh, val.astype(dt))
+
+        expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)  # (g, e, cap, d)
+        h = jnp.einsum("gecd,edf->gecf", expert_in, p["wi"].astype(dt))
+        gate = jnp.einsum("gecd,edf->gecf", expert_in, p["wg"].astype(dt))
+        h = jax.nn.silu(gate) * h
+        expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+        y = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+
+    # aux losses (Switch): load-balance + router z-loss ingredients
+    exp_oh = onehot.astype(jnp.float32) * keep[..., None].astype(jnp.float32)
+    density = jnp.mean(exp_oh.sum(2), axis=1)  # (g, e) fraction routed
+    prob_mass = jnp.mean(gates, axis=1)  # (g, e)
+    lb_loss = e * jnp.mean(jnp.sum(density * prob_mass, -1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, -1)))
+    aux = {"load_balance": lb_loss, "router_z": z_loss,
+           "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y.reshape(b, s, d), aux

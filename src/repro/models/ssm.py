@@ -1,0 +1,406 @@
+"""Sequence-state models: mLSTM (xLSTM) and Mamba2 (SSD), scan-based.
+
+Both are written in their *recurrent* (state-passing) form with
+``jax.lax.scan`` over time — O(1) state per token, which is what makes the
+``long_500k`` decode shape tractable.  The paper's technique applies to these
+blocks through their norms (CoRN rsqrt) — their mixers are softmax-free, as
+recorded in DESIGN.md §6.
+
+Decode paths carry (conv window, state) caches and cost O(1) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import gn_rmsnorm
+from repro.models.layers import ParamSpec
+
+
+# =============================================================== mLSTM ======
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    return {
+        "w_up": ParamSpec((d, 2 * d_in), ("embed_fsdp", "ff")),
+        "conv_w": ParamSpec((s.conv_dim, d_in), (None, "ff")),
+        # block-diagonal per-head projections (xLSTM paper) — 4x fewer params
+        "wq": ParamSpec((cfg.n_heads, d // cfg.n_heads * s.expand, d // cfg.n_heads * s.expand), (None, "heads_tp", None)),
+        "wk": ParamSpec((cfg.n_heads, d // cfg.n_heads * s.expand, d // cfg.n_heads * s.expand), (None, "heads_tp", None)),
+        "wv": ParamSpec((cfg.n_heads, d // cfg.n_heads * s.expand, d // cfg.n_heads * s.expand), (None, "heads_tp", None)),
+        "w_gate": ParamSpec((d_in, 2 * cfg.n_heads), ("ff", None)),
+        "b_gate": ParamSpec((2 * cfg.n_heads,), (None,), init="zeros"),
+        "w_down": ParamSpec((d_in, d), ("ff", "embed_fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv along time.  x: (B,S,C), w: (K,C).
+
+    With ``state`` (B,K-1,C) provided, uses it as left context (decode);
+    returns (out, new_state).
+
+    Long sequences use one grouped ``lax.conv_general_dilated`` — perf
+    iteration C2 (§Perf): the unrolled K-tap shift-add materializes ~2K
+    (B,S,C) tensors per pass; the fused conv touches x and the output once.
+    Decode (S < K) keeps the shift-add form, which XLA fuses trivially.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    if x.shape[1] >= k:
+        c = x.shape[2]
+        out = jax.lax.conv_general_dilated(
+            xp,
+            w[:, None, :].astype(x.dtype),  # (K, 1, C) = (W, I/group, O)
+            window_strides=(1,),
+            padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=c,
+        )
+    else:
+        out = jnp.zeros_like(x)
+        for i in range(k):
+            out = out + xp[:, i : i + x.shape[1]] * w[i][None, None, :]
+    new_state = xp[:, -(k - 1) :] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return out, new_state
+
+
+def _mlstm_heads(cfg, q, k, v, i_raw, f_raw, carry):
+    """One time-step of the mLSTM cell (stabilized exponential gating).
+
+    q/k/v: (B,H,dh); i_raw/f_raw: (B,H); carry = (C, n, m).
+    """
+    C, n, m = carry
+    dh = q.shape[-1]
+    m_new = jnp.maximum(f_raw + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_raw + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :] * (dh**-0.5)
+    )  # (B,H,dh,dh)
+    n = f_g[..., None] * n + i_g[..., None] * k * (dh**-0.5)
+    h_num = jnp.einsum("bhij,bhj->bhi", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), jnp.exp(-m_new))
+    h = h_num / h_den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_chunked(q, k, v, i_raw, f_raw, carry, chunk: int):
+    """Chunkwise-parallel mLSTM — perf iteration X1 (§Perf), the xLSTM
+    analogue of the chunked SSD (C1).
+
+    The recurrent form reads+writes the (B,H,dh,dh) f32 matrix memory every
+    token (dh=512 for xlstm-350m -> ~1.6e16 HBM bytes/device on train_4k).
+    Chunkwise, with F the within-chunk inclusive cumsum of log-forget,
+    s_j = i_j - F_j and the running stabilizer M_t = max(m_in, cummax_j s_j):
+
+        m_t   = F_t + M_t                       (identical to the recurrence)
+        C~q_t = sum_{j<=t} exp(s_j - M_t)(k_j.q_t)/sqrt(dh) v_j
+                + exp(m_in - M_t) C_in q_t
+        n_t   = sum_{j<=t} exp(s_j - M_t) k_j/sqrt(dh) + exp(m_in - M_t) n_in
+        h_t   = C~q_t / max(|n_t.q_t|, exp(-m_t))
+
+    i.e. masked intra-chunk matmuls + one (C,n,m) state pass per chunk.
+    Equivalence to the recurrence is property-tested
+    (tests/test_mlstm_chunked.py), including the stabilizer path.
+
+    q/k/v: (B,S,H,dh) f32; i_raw/f_raw: (B,S,H) f32 (f_raw = log-sigmoid).
+    Returns (h (B,S,H*dh) f32 flattened later, (C,n,m)).
+    """
+    b, s, H, dh = q.shape
+    nc, Q = s // chunk, chunk
+    scale = dh**-0.5
+
+    qc = q.reshape(b, nc, Q, H, dh)
+    kc = k.reshape(b, nc, Q, H, dh) * scale
+    vc = v.reshape(b, nc, Q, H, dh)
+    ic = i_raw.reshape(b, nc, Q, H)
+    fc = f_raw.reshape(b, nc, Q, H)
+
+    F = jnp.cumsum(fc, axis=2)              # (b,nc,Q,H) inclusive
+    s_j = ic - F                            # (b,nc,Q,H)
+    s_cummax = jax.lax.cummax(s_j, axis=2)  # running max over t
+    F_last = F[:, :, -1]                    # (b,nc,H)
+    s_max = s_cummax[:, :, -1]
+
+    # intra-chunk decay matrix pieces that don't depend on the carry:
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        C_in, n_in, m_in = state
+        q_c, k_c, v_c, sj_c, scm_c, Fl_c, sm_c, F_c = inp
+        M = jnp.maximum(m_in[:, None], scm_c)          # (b,Q,H)
+        # D[t,j] = exp(s_j - M_t) masked j<=t
+        D = jnp.exp(
+            jnp.where(tri[None, :, :, None], sj_c[:, None, :, :] - M[:, :, None, :], -jnp.inf)
+        )  # (b,t,j,H)
+        G = jnp.einsum("bthd,bjhd->bthj", q_c, k_c)    # scores (k pre-scaled)
+        num = jnp.einsum("bthj,btjh,bjhd->bthd", G, D, v_c)
+        n_t = jnp.einsum("btjh,bjhd->bthd", D, k_c)
+        carry_w = jnp.exp(m_in[:, None] - M)           # (b,Q,H)
+        num = num + carry_w[..., None] * jnp.einsum("bhij,bthj->bthi", C_in, q_c)
+        n_t = n_t + carry_w[..., None] * n_in[:, None]
+        m_t = F_c + M
+        qn = jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, q_c))
+        h = num / jnp.maximum(qn, jnp.exp(-m_t))[..., None]
+
+        # ---- state to the next chunk (stabilizer = last row's M) ----------
+        M_out = jnp.maximum(m_in, sm_c)                # (b,H)
+        w_j = jnp.exp(sj_c - M_out[:, None])           # (b,Q,H)
+        cw = jnp.exp(m_in - M_out)                     # (b,H)
+        C_out = cw[..., None, None] * C_in + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", w_j, v_c, k_c
+        )
+        n_out = cw[..., None] * n_in + jnp.einsum("bjh,bjhd->bhd", w_j, k_c)
+        m_out = Fl_c + M_out
+        return (C_out, n_out, m_out), h
+
+    xs = jax.tree.map(
+        lambda a: jnp.moveaxis(a, 1, 0), (qc, kc, vc, s_j, s_cummax, F_last, s_max, F)
+    )
+    state, hs = jax.lax.scan(chunk_step, carry, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, H * dh)
+    return h, state
+
+
+def mlstm_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
+    """x: (B,S,D) -> (y, carry).  carry=None initializes zero state."""
+    dt = x.dtype
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    h_heads = cfg.n_heads
+    dh = d_in // h_heads
+
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    u, z = up[..., :d_in], up[..., d_in:]
+    if carry is None:
+        conv_state = None
+        C0 = jnp.zeros((b, h_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h_heads, dh), jnp.float32)
+        m0 = jnp.full((b, h_heads), -1e30, jnp.float32)
+    else:
+        conv_state, C0, n0, m0 = carry
+    uc, conv_state = _causal_conv(u, p["conv_w"].astype(dt), conv_state)
+    uc = jax.nn.silu(uc)
+
+    uch = uc.reshape(b, s, h_heads, dh)
+    uh = u.reshape(b, s, h_heads, dh)
+    q = jnp.einsum("bshd,hde->bshe", uch, p["wq"].astype(dt))
+    k = jnp.einsum("bshd,hde->bshe", uch, p["wk"].astype(dt))
+    v = jnp.einsum("bshd,hde->bshe", uh, p["wv"].astype(dt))
+    gates = jnp.einsum("bsf,fg->bsg", uc, p["w_gate"].astype(dt)) + p["b_gate"].astype(dt)
+    i_raw = gates[..., :h_heads].astype(jnp.float32)
+    f_raw = jax.nn.log_sigmoid(gates[..., h_heads:].astype(jnp.float32))
+
+    def step(carry, inp):
+        qt, kt, vt, it, ft = inp
+        return _mlstm_heads(
+            cfg, qt.astype(jnp.float32), kt.astype(jnp.float32), vt.astype(jnp.float32), it, ft, carry
+        )
+
+    chunk = s_cfg.chunk
+    if chunk and s > chunk and s % chunk == 0:
+        hs_bshd, (C, n, m) = _mlstm_chunked(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            i_raw, f_raw, (C0, n0, m0), chunk,
+        )
+        h = hs_bshd.reshape(b, s, d_in).astype(dt)
+    else:
+        xs = (
+            q.transpose(1, 0, 2, 3),
+            k.transpose(1, 0, 2, 3),
+            v.transpose(1, 0, 2, 3),
+            i_raw.transpose(1, 0, 2),
+            f_raw.transpose(1, 0, 2),
+        )
+        (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+        h = hs.transpose(1, 0, 2, 3).reshape(b, s, d_in).astype(dt)  # (B,S,d_in)
+    h = gn_rmsnorm(h)  # per-block normalizer (CoRN unit)
+    out = h * jax.nn.silu(z)
+    y = jnp.einsum("bsf,fd->bsd", out, p["w_down"].astype(dt))
+    return y, (conv_state, C, n, m)
+
+
+def mlstm_cache_shape(cfg: ModelConfig, batch: int) -> tuple:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = cfg.n_heads
+    dh = d_in // h
+    dt = jnp.dtype(cfg.dtype)
+    return (
+        jax.ShapeDtypeStruct((batch, s.conv_dim - 1, d_in), dt),
+        jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, h), jnp.float32),
+    )
+
+
+# ============================================================== Mamba2 ======
+def _ssd_recurrent(xs, B, C, dt_v, decay, h0):
+    """SSD in per-token recurrent form (decode / odd lengths).
+
+    xs: (B,S,H,dh); B/C: (B,S,N); dt_v/decay: (B,S,H); h0: (B,H,dh,N).
+    Returns (y (B,S,H,dh) float32, h_final).
+    """
+
+    def step(h, inp):
+        xt, bt, ct, dct, dtt = inp  # (B,H,dh) (B,N) (B,N) (B,H) (B,H)
+        h = h * dct[..., None, None] + (
+            dtt[..., None, None] * xt[..., None] * bt[:, None, None, :]
+        )
+        yt = jnp.einsum("bhdn,bn->bhd", h, ct)
+        return h, yt
+
+    seq = (
+        xs.transpose(1, 0, 2, 3).astype(jnp.float32),
+        B.transpose(1, 0, 2).astype(jnp.float32),
+        C.transpose(1, 0, 2).astype(jnp.float32),
+        decay.transpose(1, 0, 2),
+        dt_v.transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, h0, seq)
+    return ys.transpose(1, 0, 2, 3), h_final
+
+
+def _ssd_chunked(xs, B, C, dt_v, decay, h0, chunk: int):
+    """SSD in the chunked (block) form — perf iteration C1 (§Perf).
+
+    The recurrent form reads+writes the (B,H,dh,N) f32 state every token:
+    ~1e16 HBM bytes/device on zamba2 train_4k.  Chunking recovers the actual
+    Mamba2 SSD algorithm: within a chunk of Q tokens the output is an
+    attention-like pair of MXU matmuls; the state crosses chunk boundaries
+    once per chunk.  Identical math (test: tests/test_ssd_chunked.py).
+
+      y_t = sum_{j<=t} exp(l_t - l_j) dt_j (C_t . B_j) x_j   [intra, j in chunk]
+            + exp(l_t) C_t . h_in                            [inter]
+      h_out = exp(l_last) h_in + sum_j exp(l_last - l_j) dt_j x_j B_j^T
+
+    with l the inclusive cumsum of log decay within the chunk.
+    """
+    b, s, H, dh = xs.shape
+    n = B.shape[-1]
+    nc, Q = s // chunk, chunk
+
+    xs = xs.reshape(b, nc, Q, H, dh).astype(jnp.float32)
+    Bc = B.reshape(b, nc, Q, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, n).astype(jnp.float32)
+    dt_c = dt_v.reshape(b, nc, Q, H)
+    # log decay cumsum; decay = exp(dt*A) with A<0 so l is non-increasing
+    llog = jnp.log(jnp.maximum(decay.reshape(b, nc, Q, H), 1e-38))
+    l = jnp.cumsum(llog, axis=2)  # (b,nc,Q,H) inclusive
+    l_last = l[:, :, -1]  # (b,nc,H)
+
+    # ---- intra-chunk: M[i,j] = (C_i.B_j) exp(l_i-l_j) dt_j  for j<=i -------
+    # (vectorized over chunks: measured better than building tiles inside the
+    # chunk scan — the scan variant pays moveaxis copies of every input and
+    # the same peak, zamba2 prefill_32k 125.7 s vs 145.0 s memory term)
+    g = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # (b,nc,Q,Q)
+    ldiff = l[:, :, :, None, :] - l[:, :, None, :, :]  # (b,nc,Q(i),Q(j),H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    ldiff = jnp.where(mask[None, None, :, :, None], ldiff, -jnp.inf)
+    w = jnp.exp(ldiff) * dt_c[:, :, None, :, :]  # (b,nc,i,j,H)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhd->bcihd", g, w, xs)
+
+    # ---- inter-chunk: per-chunk state contribution + carried state ---------
+    # S_c = sum_j exp(l_last - l_j) dt_j x_j B_j^T   (b,nc,H,dh,n)
+    wj = jnp.exp(l_last[:, :, None] - l) * dt_c  # (b,nc,Q,H)
+    s_c = jnp.einsum("bcqh,bcqhd,bcqn->bchdn", wj, xs, Bc)
+    g_last = jnp.exp(l_last)  # (b,nc,H)
+    c_e = Cc[:, :, :, None, :] * jnp.exp(l)[..., None]  # (b,nc,Q,H,n)
+
+    def chunk_step(h, inp):
+        ce_c, sc_c, gl_c = inp  # (b,Q,H,n) (b,H,dh,n) (b,H)
+        y_inter = jnp.einsum("bhdn,bqhn->bqhd", h, ce_c)
+        h = h * gl_c[..., None, None] + sc_c
+        return h, y_inter
+
+    h_final, y_inter = jax.lax.scan(
+        chunk_step,
+        h0,
+        (
+            c_e.transpose(1, 0, 2, 3, 4),
+            s_c.transpose(1, 0, 2, 3, 4),
+            g_last.transpose(1, 0, 2),
+        ),
+    )
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)  # (b,nc,Q,H,dh)
+    return y.reshape(b, s, H, dh), h_final
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return {
+        "in_proj": ParamSpec(
+            (d, 2 * d_in + 2 * s.state_dim + nheads), ("embed_fsdp", "ff")
+        ),
+        "conv_w": ParamSpec((s.conv_dim, conv_ch), (None, None)),
+        "a_log": ParamSpec((nheads,), (None,), init="zeros"),
+        "d_skip": ParamSpec((nheads,), (None,), init="ones"),
+        "dt_bias": ParamSpec((nheads,), (None,), init="zeros"),
+        "norm": ParamSpec((d_in,), (None,), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("ff", "embed_fsdp")),
+    }
+
+
+def mamba2_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
+    """SSD in recurrent form.  x: (B,S,D) -> (y, carry)."""
+    dt_ = x.dtype
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    nst = s_cfg.state_dim
+    dh = s_cfg.head_dim
+    nheads = d_in // dh
+
+    zxbcdt = jnp.einsum("bsd,df->bsf", x, p["in_proj"].astype(dt_))
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * nst]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * nst :]  # (B,S,H)
+
+    if carry is None:
+        conv_state = None
+        h0 = jnp.zeros((b, nheads, dh, nst), jnp.float32)
+    else:
+        conv_state, h0 = carry
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(dt_), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(b, s, nheads, dh)
+    B = xbc[..., d_in : d_in + nst]  # (B,S,N) shared across heads
+    C = xbc[..., d_in + nst :]
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative decay rates
+    decay = jnp.exp(dt_v * A)  # (B,S,H)
+
+    chunk = s_cfg.chunk
+    if chunk and s > chunk and s % chunk == 0:
+        y, h_final = _ssd_chunked(xs, B, C, dt_v, decay, h0, chunk)
+    else:
+        y, h_final = _ssd_recurrent(xs, B, C, dt_v, decay, h0)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(dt_)
+    y = gn_rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"].astype(dt_))
+    return out, (conv_state, h_final)
+
+
+def mamba2_cache_shape(cfg: ModelConfig, batch: int) -> tuple:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return (
+        jax.ShapeDtypeStruct((batch, s.conv_dim - 1, d_in + 2 * s.state_dim), dt),
+        jax.ShapeDtypeStruct((batch, nheads, s.head_dim, s.state_dim), jnp.float32),
+    )

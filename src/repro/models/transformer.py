@@ -1,0 +1,666 @@
+"""Model assembly: all 10 assigned families behind one functional API.
+
+``Model(cfg)`` exposes:
+  * ``param_specs()`` / ``init(key)``           — ParamSpec tree / materialized params
+  * ``loss(params, batch)`` / ``forward``       — training path (scan over layers)
+  * ``cache_specs`` / ``init_cache``            — decode-cache ShapeDtypeStructs
+  * ``prefill(params, batch, max_seq)``         — prompt pass, returns (logits, cache)
+  * ``decode_step(params, cache, token, pos)``  — one-token serve step
+
+Families:
+  dense (GQA/MHA/MLA)   — standard pre-norm residual blocks
+  moe                   — dense attention + GShard top-k MoE MLP
+  ssm                   — mLSTM (xLSTM) blocks, no separate MLP
+  hybrid                — Zamba2: groups of Mamba2 layers, each group preceded
+                          by ONE weight-shared attention block (its KV cache is
+                          per-application); grouped two-level scan
+  encdec                — Whisper: encoder over stub frame embeddings, decoder
+                          with self+cross attention
+  vlm                   — Llama-3.2-V: gated cross-attention every K layers
+                          over stub patch embeddings; grouped two-level scan
+
+Layers are scanned (stacked params) so HLO size is depth-independent; remat
+policy per config.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    ParamSpec,
+    apply_mlp,
+    apply_norm,
+    embed_specs,
+    init_tree,
+    lm_head_specs,
+    mlp_specs,
+    norm_specs,
+    spec_struct,
+    stack_specs,
+)
+from repro.parallel.sharding import shard
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _lm_head(cfg, params, x):
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype)
+    )
+    return shard(logits, "batch", "seq", "vocab")
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family == "hybrid":
+            assert cfg.n_layers % cfg.attn_every == 0, "hybrid needs L % cadence == 0"
+        if cfg.family == "vlm":
+            assert cfg.n_layers % cfg.cross_attn_every == 0
+
+    # ------------------------------------------------------------- specs ---
+    def _mixer_specs(self) -> dict:
+        cfg = self.cfg
+        if cfg.mla is not None:
+            return mla_mod.mla_specs(cfg)
+        if cfg.family == "ssm":
+            return (
+                ssm_mod.mlstm_specs(cfg)
+                if cfg.ssm.kind == "mlstm"
+                else ssm_mod.mamba2_specs(cfg)
+            )
+        if cfg.family == "hybrid":
+            return ssm_mod.mamba2_specs(cfg)
+        return attn.attn_specs(cfg)
+
+    def _block_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict[str, Any] = {"ln1": norm_specs(cfg), "mixer": self._mixer_specs()}
+        if cfg.family in ("ssm", "hybrid"):
+            return specs  # these archs carry no separate MLP (d_ff folded in)
+        specs["ln2"] = norm_specs(cfg)
+        specs["mlp"] = moe_mod.moe_specs(cfg) if cfg.moe else mlp_specs(cfg)
+        return specs
+
+    def _attn_block_specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "ln1": norm_specs(cfg),
+            "attn": attn.attn_specs(cfg),
+            "ln2": norm_specs(cfg),
+            "mlp": mlp_specs(cfg),
+        }
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict[str, Any] = {
+            "embed": embed_specs(cfg),
+            "layers": stack_specs(self._block_specs(), cfg.n_layers, "layers"),
+            "final_norm": norm_specs(cfg),
+            "lm_head": lm_head_specs(cfg),
+        }
+        if cfg.family == "hybrid":
+            specs["shared_attn"] = self._attn_block_specs()  # ONE shared block
+        if cfg.family == "encdec":
+            specs["encoder"] = {
+                "layers": stack_specs(self._attn_block_specs(), cfg.encoder_layers, "layers"),
+                "pos": ParamSpec((cfg.encoder_seq, cfg.d_model), (None, "embed_fsdp")),
+                "final_norm": norm_specs(cfg),
+            }
+            dec_block = dict(self._block_specs())
+            dec_block["ln_x"] = norm_specs(cfg)
+            dec_block["xattn"] = attn.cross_attn_specs(cfg)
+            specs["layers"] = stack_specs(dec_block, cfg.n_layers, "layers")
+        if cfg.family == "vlm":
+            n_x = cfg.n_layers // cfg.cross_attn_every
+            xblock = {
+                "ln": norm_specs(cfg),
+                "xattn": attn.cross_attn_specs(cfg),
+                "gate": ParamSpec((1,), (None,), init="zeros"),
+                "vis_proj": ParamSpec((cfg.d_model, cfg.d_model), ("embed_fsdp", None)),
+            }
+            specs["xattn_layers"] = stack_specs(xblock, n_x, "layers")
+        return specs
+
+    def init(self, key) -> dict:
+        return init_tree(key, self.param_specs())
+
+    def param_structs(self) -> dict:
+        return spec_struct(self.param_specs())
+
+    # ------------------------------------------------------ train blocks ---
+    def _mixer_train(self, lp, h, positions):
+        cfg = self.cfg
+        if cfg.mla is not None:
+            return mla_mod.mla_self_attention(cfg, lp["mixer"], h, positions)
+        if cfg.family == "ssm":
+            blk = ssm_mod.mlstm_block if cfg.ssm.kind == "mlstm" else ssm_mod.mamba2_block
+            y, _ = blk(cfg, lp["mixer"], h)
+            return y
+        if cfg.family == "hybrid":
+            y, _ = ssm_mod.mamba2_block(cfg, lp["mixer"], h)
+            return y
+        return attn.self_attention(cfg, lp["mixer"], h, positions)
+
+    def _block_train(self, lp, x, positions, memory=None):
+        cfg = self.cfg
+        x = shard(x, "batch", "seq", "embed_act")
+        aux = {}
+        x = x + self._mixer_train(lp, apply_norm(cfg, lp["ln1"], x), positions)
+        if memory is not None and "xattn" in lp:
+            hx = apply_norm(cfg, lp["ln_x"], x)
+            x = x + attn.cross_attention(cfg, lp["xattn"], hx, memory)
+        if "mlp" in lp:
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            if cfg.moe:
+                y, aux = moe_mod.apply_moe(cfg, lp["mlp"], h2)
+            else:
+                y = apply_mlp(cfg, lp["mlp"], h2)
+            x = x + y
+        return shard(x, "batch", "seq", "embed_act"), aux
+
+    def _attn_block_train(self, sp, x, positions, causal=True):
+        cfg = self.cfg
+        h = apply_norm(cfg, sp["ln1"], x)
+        x = x + attn.self_attention(cfg, sp["attn"], h, positions, causal=causal)
+        h = apply_norm(cfg, sp["ln2"], x)
+        return x + apply_mlp(cfg, sp["mlp"], h)
+
+    def _xattn_block(self, xp, x, patches):
+        cfg = self.cfg
+        mem = jnp.einsum(
+            "bmd,de->bme", patches.astype(x.dtype), xp["vis_proj"].astype(x.dtype)
+        )
+        h = apply_norm(cfg, xp["ln"], x)
+        y = attn.cross_attention(cfg, xp["xattn"], h, mem)
+        return x + jnp.tanh(xp["gate"].astype(x.dtype)) * y
+
+    def _group_tree(self, tree, n_groups):
+        return jax.tree.map(lambda a: a.reshape(n_groups, -1, *a.shape[1:]), tree)
+
+    def _run_layers_train(self, params, x, positions, memory=None):
+        """Returns (x, aux_sums).  Handles plain / hybrid / vlm groupings."""
+        cfg = self.cfg
+
+        if cfg.family == "hybrid":
+            g = cfg.n_layers // cfg.attn_every
+            layers = self._group_tree(params["layers"], g)
+            shared = params["shared_attn"]
+
+            def group_body(x, gp):
+                x = self._attn_block_train(shared, x, positions)
+
+                def inner(x2, lp):
+                    x2, _ = self._block_train(lp, x2, positions)
+                    return x2, None
+
+                x, _ = jax.lax.scan(_remat(cfg, inner), x, gp)
+                return x, None
+
+            x, _ = jax.lax.scan(group_body, x, layers)
+            return x, jnp.zeros((2,))
+
+        if cfg.family == "vlm":
+            g = cfg.n_layers // cfg.cross_attn_every
+            layers = self._group_tree(params["layers"], g)
+
+            def group_body(x, scanned):
+                gp, xp = scanned
+                x = self._xattn_block(xp, x, memory)
+
+                def inner(x2, lp):
+                    x2, _ = self._block_train(lp, x2, positions)
+                    return x2, None
+
+                x, _ = jax.lax.scan(_remat(cfg, inner), x, gp)
+                return x, None
+
+            x, _ = jax.lax.scan(group_body, x, (layers, params["xattn_layers"]))
+            return x, jnp.zeros((2,))
+
+        def body(x, lp):
+            x, aux = self._block_train(lp, x, positions, memory=memory)
+            aux_vec = jnp.stack(
+                [
+                    jnp.asarray(aux.get("load_balance", 0.0), jnp.float32),
+                    jnp.asarray(aux.get("router_z", 0.0), jnp.float32),
+                ]
+            )
+            return x, aux_vec
+
+        x, auxs = jax.lax.scan(_remat(cfg, body), x, params["layers"])
+        return x, jnp.sum(auxs, 0)
+
+    def _encode(self, params, frames):
+        """Whisper encoder over stub frame embeddings (B, M, D)."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        dt = jnp.dtype(cfg.dtype)
+        x = frames.astype(dt) + enc["pos"][None].astype(dt)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(x, lp):
+            return self._attn_block_train(lp, x, positions, causal=False), None
+
+        x, _ = jax.lax.scan(_remat(cfg, body), x, enc["layers"])
+        return apply_norm(cfg, enc["final_norm"], x)
+
+    # ----------------------------------------------------------- forward ---
+    def forward(self, params, batch: dict):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        tokens = batch["tokens"]
+        x = params["embed"]["tok"].astype(dt)[tokens]
+        x = shard(x, "batch", "seq", "embed_act")
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+        memory = None
+        if cfg.family == "encdec":
+            memory = self._encode(params, batch["frames"])
+        elif cfg.family == "vlm":
+            memory = batch["patches"]
+        x, aux = self._run_layers_train(params, x, positions, memory=memory)
+        logits = _lm_head(cfg, params, x)
+        return logits, {"load_balance": aux[0], "router_z": aux[1]}
+
+    def loss(self, params, batch: dict):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        logits = logits.astype(jnp.float32)
+        targets = batch["tokens"][:, 1:]
+        logits = logits[:, :-1]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        metrics = {"nll": loss}
+        if cfg.moe is not None:
+            loss = loss + 0.01 * aux["load_balance"] / cfg.n_layers
+            loss = loss + 1e-3 * aux["router_z"] / cfg.n_layers
+            metrics.update(aux)
+        return loss, metrics
+
+    # ------------------------------------------------------------- cache ---
+    def _ssm_cache_tuple(self, batch):
+        cfg = self.cfg
+        if cfg.family == "ssm" and cfg.ssm.kind == "mlstm":
+            return ssm_mod.mlstm_cache_shape(cfg, batch)
+        return ssm_mod.mamba2_cache_shape(cfg, batch)
+
+    def cache_specs(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        L = cfg.n_layers
+
+        def stack(tree, n=L):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), tree
+            )
+
+        if cfg.mla is not None:
+            cache = {"layers": stack(mla_mod.mla_cache_shape(cfg, batch, max_seq))}
+        elif cfg.family == "ssm":
+            cache = {"layers": stack({i: s for i, s in enumerate(self._ssm_cache_tuple(batch))})}
+        elif cfg.family == "hybrid":
+            g = L // cfg.attn_every
+            cache = {
+                "layers": stack({i: s for i, s in enumerate(self._ssm_cache_tuple(batch))}),
+                "shared": stack(attn.attn_cache_shape(cfg, batch, max_seq), n=g),
+            }
+        else:
+            cache = {"layers": stack(attn.attn_cache_shape(cfg, batch, max_seq))}
+        if cfg.family == "encdec":
+            kvshape = (L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim)
+            cache["cross"] = {
+                "k": jax.ShapeDtypeStruct(kvshape, jnp.dtype(cfg.dtype)),
+                "v": jax.ShapeDtypeStruct(kvshape, jnp.dtype(cfg.dtype)),
+            }
+        if cfg.family == "vlm":
+            cache["patches"] = jax.ShapeDtypeStruct(
+                (batch, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        return cache
+
+    def cache_logical_axes(self):
+        """Logical sharding axes tree, parallel to cache_specs (see
+        parallel/sharding.py for the rules; 'kv_seq' switches to SP for
+        long-context decode)."""
+        cfg = self.cfg
+        if cfg.mla is not None:
+            cache = {"layers": {
+                "c_kv": ("layers", "batch", "kv_seq", None),
+                "k_rope": ("layers", "batch", "kv_seq", None),
+            }}
+        elif cfg.family == "ssm" and cfg.ssm.kind == "mlstm":
+            cache = {"layers": {
+                0: ("layers", "batch", None, "ff"),
+                1: ("layers", "batch", None, None, "heads_tp"),
+                2: ("layers", "batch", None, "heads_tp"),
+                3: ("layers", "batch", None),
+            }}
+        elif cfg.family in ("ssm", "hybrid"):
+            cache = {"layers": {
+                0: ("layers", "batch", None, "ff"),
+                1: ("layers", "batch", "heads_tp", None, None),
+            }}
+        else:
+            kvax = ("layers", "batch", "kv_seq", "heads_tp", None)
+            cache = {"layers": {"k": kvax, "v": kvax}}
+        if cfg.family == "hybrid":
+            cache["shared"] = {
+                "k": ("layers", "batch", "kv_seq", "heads_tp", None),
+                "v": ("layers", "batch", "kv_seq", "heads_tp", None),
+            }
+        if cfg.family == "encdec":
+            cache["cross"] = {
+                "k": ("layers", "batch", None, "heads_tp", None),
+                "v": ("layers", "batch", None, "heads_tp", None),
+            }
+        if cfg.family == "vlm":
+            cache["patches"] = ("batch", None, None)
+        return cache
+
+    def init_cache(self, batch: int, max_seq: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(batch, max_seq)
+        )
+
+    # ----------------------------------------------------------- prefill ---
+    def prefill(self, params, batch: dict, max_seq: int | None = None):
+        """Prompt pass.  Returns (full-seq logits, decode-ready cache)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_seq = max_seq or s
+        x = params["embed"]["tok"].astype(dt)[tokens]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def fill_kv(kv):  # (B,S,KV,dh) -> (B,T,KV,dh) at positions [0, s)
+            win = cfg.sliding_window or 0
+            slots = min(max_seq, win) if win else max_seq
+            out = jnp.zeros((b, slots, *kv.shape[2:]), kv.dtype)
+            if win and s > win:
+                kv = kv[:, -win:]
+                out = jax.lax.dynamic_update_slice(out, kv, (0, 0, 0, 0))
+                return jnp.roll(out, shift=s % win, axis=1) if win != slots else jnp.roll(out, shift=s % win, axis=1)
+            return jax.lax.dynamic_update_slice(out, kv, (0, 0, 0, 0))
+
+        memory = None
+        if cfg.family == "encdec":
+            memory = self._encode(params, batch["frames"])
+        elif cfg.family == "vlm":
+            memory = batch["patches"].astype(dt)
+
+        if cfg.family == "hybrid":
+            return self._hybrid_prefill(params, x, positions, max_seq, fill_kv)
+        if cfg.family == "vlm":
+            return self._vlm_prefill(params, x, positions, memory, fill_kv)
+
+        def body(x, lp):
+            h = apply_norm(cfg, lp["ln1"], x)
+            if cfg.mla is not None:
+                y, kv = mla_mod.mla_prefill(cfg, lp["mixer"], h, positions)
+                kv = {
+                    k: jax.lax.dynamic_update_slice(
+                        jnp.zeros((b, max_seq, v.shape[-1]), v.dtype), v, (0, 0, 0)
+                    )
+                    for k, v in kv.items()
+                }
+            elif cfg.family == "ssm":
+                blk = ssm_mod.mlstm_block if cfg.ssm.kind == "mlstm" else ssm_mod.mamba2_block
+                y, carry = blk(cfg, lp["mixer"], h)
+                kv = {i: c for i, c in enumerate(carry)}
+            else:
+                y, kv = attn.attn_prefill(cfg, lp["mixer"], h, positions)
+                kv = {k: fill_kv(v) for k, v in kv.items()}
+            x = x + y
+            if memory is not None and "xattn" in lp:
+                hx = apply_norm(cfg, lp["ln_x"], x)
+                x = x + attn.cross_attention(cfg, lp["xattn"], hx, memory)
+                mk, mv = _project_cross_kv(cfg, lp["xattn"], memory)
+                kv = {"k": kv["k"], "v": kv["v"], "xk": mk, "xv": mv}
+            if "mlp" in lp:
+                h2 = apply_norm(cfg, lp["ln2"], x)
+                y = (
+                    moe_mod.apply_moe(cfg, lp["mlp"], h2)[0]
+                    if cfg.moe
+                    else apply_mlp(cfg, lp["mlp"], h2)
+                )
+                x = x + y
+            return x, kv
+
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        logits = _lm_head(cfg, params, x)
+        if cfg.family == "encdec":
+            cache = {
+                "layers": {"k": kvs["k"], "v": kvs["v"]},
+                "cross": {"k": kvs["xk"], "v": kvs["xv"]},
+            }
+        else:
+            cache = {"layers": kvs}
+        return logits, cache
+
+    def _hybrid_prefill(self, params, x, positions, max_seq, fill_kv):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.attn_every
+        layers = self._group_tree(params["layers"], g)
+        shared = params["shared_attn"]
+        b = x.shape[0]
+
+        def group_body(x, gp):
+            h = apply_norm(cfg, shared["ln1"], x)
+            y, kv = attn.attn_prefill(cfg, shared["attn"], h, positions)
+            x = x + y
+            h = apply_norm(cfg, shared["ln2"], x)
+            x = x + apply_mlp(cfg, shared["mlp"], h)
+            kv = {k: fill_kv(v) for k, v in kv.items()}
+
+            def inner(x2, lp):
+                h2 = apply_norm(cfg, lp["ln1"], x2)
+                y2, carry = ssm_mod.mamba2_block(cfg, lp["mixer"], h2)
+                return x2 + y2, {i: c for i, c in enumerate(carry)}
+
+            x, carries = jax.lax.scan(inner, x, gp)
+            return x, (kv, carries)
+
+        x, (shared_kv, carries) = jax.lax.scan(group_body, x, layers)
+        logits = _lm_head(cfg, params, x)
+        L = cfg.n_layers
+        carries = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), carries)
+        return logits, {"layers": carries, "shared": shared_kv}
+
+    def _vlm_prefill(self, params, x, positions, patches, fill_kv):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.cross_attn_every
+        layers = self._group_tree(params["layers"], g)
+
+        def group_body(x, scanned):
+            gp, xp = scanned
+            x = self._xattn_block(xp, x, patches)
+
+            def inner(x2, lp):
+                h = apply_norm(cfg, lp["ln1"], x2)
+                y, kv = attn.attn_prefill(cfg, lp["mixer"], h, positions)
+                x2 = x2 + y
+                h2 = apply_norm(cfg, lp["ln2"], x2)
+                x2 = x2 + apply_mlp(cfg, lp["mlp"], h2)
+                return x2, {k: fill_kv(v) for k, v in kv.items()}
+
+            x, kvs = jax.lax.scan(inner, x, gp)
+            return x, kvs
+
+        x, kvs = jax.lax.scan(group_body, x, (layers, params["xattn_layers"]))
+        logits = _lm_head(cfg, params, x)
+        L = cfg.n_layers
+        kvs = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), kvs)
+        return logits, {"layers": kvs, "patches": patches}
+
+    # ------------------------------------------------------------ decode ---
+    def decode_step(self, params, cache, token, pos):
+        """token: (B, 1) int32; pos: scalar int32.  Returns (logits, cache)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed"]["tok"].astype(dt)[token]  # (B, 1, D)
+        x = shard(x, "batch", None, "embed_act")
+
+        if cfg.family == "hybrid":
+            return self._hybrid_decode(params, cache, x, pos)
+        if cfg.family == "vlm":
+            return self._vlm_decode(params, cache, x, pos)
+        if cfg.family == "encdec":
+            return self._encdec_decode(params, cache, x, pos)
+
+        def body(x, scanned):
+            lp, lcache = scanned
+            h = apply_norm(cfg, lp["ln1"], x)
+            if cfg.mla is not None:
+                y, nc = mla_mod.mla_decode_step(cfg, lp["mixer"], lcache, h, pos)
+            elif cfg.family == "ssm":
+                blk = ssm_mod.mlstm_block if cfg.ssm.kind == "mlstm" else ssm_mod.mamba2_block
+                carry = tuple(lcache[i] for i in sorted(lcache))
+                y, ncarry = blk(cfg, lp["mixer"], h, carry)
+                nc = {i: c for i, c in enumerate(ncarry)}
+            else:
+                y, nc = attn.attn_decode_step(cfg, lp["mixer"], lcache, h, pos)
+            x = x + y
+            if "mlp" in lp:
+                h2 = apply_norm(cfg, lp["ln2"], x)
+                y = (
+                    moe_mod.apply_moe(cfg, lp["mlp"], h2)[0]
+                    if cfg.moe
+                    else apply_mlp(cfg, lp["mlp"], h2)
+                )
+                x = x + y
+            return x, nc
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        logits = _lm_head(cfg, params, x)
+        return logits, {**cache, "layers": new_layers}
+
+    def _hybrid_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.attn_every
+        layers = self._group_tree(params["layers"], g)
+        lcache = self._group_tree(cache["layers"], g)
+        shared = params["shared_attn"]
+
+        def group_body(x, scanned):
+            gp, gc, skv = scanned
+            h = apply_norm(cfg, shared["ln1"], x)
+            y, new_skv = attn.attn_decode_step(cfg, shared["attn"], skv, h, pos)
+            x = x + y
+            h = apply_norm(cfg, shared["ln2"], x)
+            x = x + apply_mlp(cfg, shared["mlp"], h)
+
+            def inner(x2, s2):
+                lp, lc = s2
+                h2 = apply_norm(cfg, lp["ln1"], x2)
+                carry = tuple(lc[i] for i in sorted(lc))
+                y2, ncarry = ssm_mod.mamba2_block(cfg, lp["mixer"], h2, carry)
+                return x2 + y2, {i: c for i, c in enumerate(ncarry)}
+
+            x, ncarries = jax.lax.scan(inner, x, (gp, gc))
+            return x, (ncarries, new_skv)
+
+        x, (ncar, nskv) = jax.lax.scan(group_body, x, (layers, lcache, cache["shared"]))
+        L = cfg.n_layers
+        ncar = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), ncar)
+        logits = _lm_head(cfg, params, x)
+        return logits, {"layers": ncar, "shared": nskv}
+
+    def _vlm_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.cross_attn_every
+        layers = self._group_tree(params["layers"], g)
+        lcache = self._group_tree(cache["layers"], g)
+        patches = cache["patches"]
+
+        def group_body(x, scanned):
+            gp, xp, gc = scanned
+            x = self._xattn_block(xp, x, patches)
+
+            def inner(x2, s2):
+                lp, lc = s2
+                h = apply_norm(cfg, lp["ln1"], x2)
+                y, nc = attn.attn_decode_step(cfg, lp["mixer"], lc, h, pos)
+                x2 = x2 + y
+                h2 = apply_norm(cfg, lp["ln2"], x2)
+                x2 = x2 + apply_mlp(cfg, lp["mlp"], h2)
+                return x2, nc
+
+            x, ngc = jax.lax.scan(inner, x, (gp, gc))
+            return x, ngc
+
+        x, nlc = jax.lax.scan(group_body, x, (layers, params["xattn_layers"], lcache))
+        nlc = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nlc)
+        logits = _lm_head(cfg, params, x)
+        return logits, {**cache, "layers": nlc}
+
+    def _encdec_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+
+        def body(x, scanned):
+            lp, lcache, xk, xv = scanned
+            h = apply_norm(cfg, lp["ln1"], x)
+            y, nc = attn.attn_decode_step(cfg, lp["mixer"], lcache, h, pos)
+            x = x + y
+            hx = apply_norm(cfg, lp["ln_x"], x)
+            x = x + _cross_attend_cached(cfg, lp["xattn"], hx, xk, xv)
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + apply_mlp(cfg, lp["mlp"], h2)
+            return x, nc
+
+        x, new_layers = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"], cache["cross"]["k"], cache["cross"]["v"])
+        )
+        logits = _lm_head(cfg, params, x)
+        return logits, {**cache, "layers": new_layers}
+
+
+def _project_cross_kv(cfg: ModelConfig, p: dict, memory):
+    dt = memory.dtype
+    b, m, _ = memory.shape
+    k = jnp.einsum("bmd,df->bmf", memory, p["wk"].astype(dt)).reshape(
+        b, m, cfg.n_kv_heads, cfg.head_dim
+    )
+    v = jnp.einsum("bmd,df->bmf", memory, p["wv"].astype(dt)).reshape(
+        b, m, cfg.n_kv_heads, cfg.head_dim
+    )
+    return k, v
+
+
+def _cross_attend_cached(cfg: ModelConfig, p: dict, x, k, v):
+    """Cross-attn with precomputed memory kv.  x: (B,S,D); k/v: (B,M,KV,dh)."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)).reshape(
+        b, s, cfg.n_heads, cfg.head_dim
+    )
+    kvh = cfg.n_kv_heads
+    group = cfg.n_heads // kvh
+    qg = q.reshape(b, s, kvh, group, cfg.head_dim)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) * (cfg.head_dim**-0.5)
+    from repro.core import get_softmax
+
+    pmat = get_softmax(cfg.softmax_impl)(scores.astype(jnp.float32)).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", pmat, v).reshape(b, s, cfg.q_features)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

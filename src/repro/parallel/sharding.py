@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules (MaxText-style) for FSDP + TP + EP + SP.
+
+Parameters and activations carry *logical* axis names; a rules table maps them
+to mesh axes.  The launcher installs a :class:`ShardingCtx`; without one every
+helper is a no-op, so models run unmodified on a single CPU device (tests).
+
+Default mapping (see DESIGN.md §4):
+  * ``embed_fsdp``  -> 'data'            (FSDP: params sharded over data axis)
+  * ``heads_tp``/``ff``/``vocab``/``expert`` -> 'model'   (tensor/expert parallel)
+  * ``batch``       -> ('pod', 'data')   (pure DP across pods)
+  * ``kv_seq``      -> None, except long-context decode (SP) where the KV/state
+                       sequence dim shards over ('pod', 'data')
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, object] = {
+    "embed_fsdp": "data",
+    "heads_tp": "model",
+    "ff": "model",
+    "vocab": "model",
+    "expert": "model",
+    "layers": None,
+    "batch": ("pod", "data"),
+    # NOTE (perf A5, refuted — §Perf): flipping this to "model" (Megatron-SP
+    # residual stream) made every term *worse* (collective 99.7s -> 765s on
+    # mixtral train_4k): under GSPMD + scanned heterogeneous blocks the single
+    # rule flip causes resharding ping-pong at every block-internal
+    # constraint.  Real SP needs explicit gather/scatter segments; kept
+    # replicated-seq as the measured optimum.
+    "seq": None,
+    "kv_seq": "model",  # decode: KV cache sharded along sequence (GQA kv_heads
+    #                       rarely divide TP=16; seq always does at 32k)
+    "group": ("pod", "data"),   # MoE dispatch groups follow the batch axis
+    "embed_act": None,          # residual-stream feature dim
+    "heads_act": "model",       # activation heads dim (TP)
+    "ff_act": "model",
+}
+
+# Sequence-parallel override for batch=1 long-context decode.
+SP_OVERRIDES = {
+    "batch": None,
+    "kv_seq": ("pod", "data", "model"),
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: dict
+
+    def spec(self, logical_axes: tuple) -> P:
+        parts = []
+        used: set[str] = set()  # a mesh axis may shard at most one dim;
+        #                         first logical axis wins (e.g. logits carry
+        #                         both 'seq' and 'vocab' under SP rules)
+        for ax in logical_axes:
+            m = self.rules.get(ax) if ax is not None else None
+            # drop mesh axes the mesh doesn't have (e.g. 'pod' on single-pod)
+            if isinstance(m, tuple):
+                m = tuple(a for a in m if a in self.mesh.axis_names and a not in used)
+                m = m if m else None
+                if isinstance(m, tuple) and len(m) == 1:
+                    m = m[0]
+            elif m is not None and (m not in self.mesh.axis_names or m in used):
+                m = None
+            if m is not None:
+                used.update(m if isinstance(m, tuple) else (m,))
+            parts.append(m)
+        return P(*parts)
+
+    def sharding(self, logical_axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+    def sharding_for_shape(self, shape: tuple, logical_axes: tuple) -> NamedSharding:
+        """Shape-aware: jit *argument* shardings must divide dims exactly, so
+        any mesh axis whose size doesn't divide the dim is dropped (the value
+        is replicated along it) — recorded as a known padding/replication
+        trade-off in EXPERIMENTS.md."""
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        base = self.spec(logical_axes)
+        parts = []
+        used: set[str] = set()  # a mesh axis may shard at most one dim
+        for dim, m in zip(shape, tuple(base) + (None,) * (len(shape) - len(base))):
+            if m is None:
+                parts.append(None)
+                continue
+            axes = m if isinstance(m, tuple) else (m,)
+            total = 1
+            kept = []
+            for a in axes:
+                if a not in used and dim % (total * sizes[a]) == 0:
+                    kept.append(a)
+                    used.add(a)
+                    total *= sizes[a]
+            parts.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+        return NamedSharding(self.mesh, P(*parts))
+
+
+_tls = threading.local()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, overrides: dict | None = None):
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    prev = current_ctx()
+    _tls.ctx = ShardingCtx(mesh, rules)
+    try:
+        yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without a context)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(tuple(logical_axes)))
+
+
+def param_sharding_tree(spec_tree):
+    """ParamSpec tree -> NamedSharding tree (None context -> None tree)."""
+    from repro.models.layers import ParamSpec
+
+    ctx = current_ctx()
+    if ctx is None:
+        return None
+    return jax.tree.map(
+        lambda s: ctx.sharding(s.logical_axes),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )

@@ -1,0 +1,162 @@
+"""Three-term roofline analysis from a compiled AOT artifact.
+
+  compute    = HLO_FLOPs / (chips x peak)          [peak: 197 TFLOP/s bf16 / chip]
+  memory     = HLO_bytes / (chips x HBM_bw)        [819 GB/s / chip]
+  collective = collective_bytes / (chips x link)   [~50 GB/s / link ICI]
+
+``cost_analysis()`` reports the *per-device* partitioned program, so the
+per-device quantities divided by per-chip peaks equal the formulas above.
+collective_bytes is not in cost_analysis: we parse the optimized (post-SPMD)
+HLO text and sum the tensor bytes moved by every collective op, with the
+standard ring accounting (all-reduce counts 2x: reduce-scatter + all-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# matches e.g. "bf16[256,1024]{1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, by kind (ring accounting)."""
+    out = {k: 0 for k in _COLLECTIVE_KINDS}
+    count = {k: 0 for k in _COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result = <shape> <op>(...) — find which collective op this line is
+        m = re.search(r"=\s*(\(?[\w\[\],{}\s/]*?\)?)\s*(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\(", ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done" in ls.split("=")[1][:60]:
+            continue  # paired -done carries no new traffic
+        shapes = _SHAPE_RE.findall(m.group(1))
+        nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        if kind == "all-reduce":
+            nbytes *= 2  # reduce-scatter + all-gather ring phases
+        out[kind] += nbytes
+        count[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVE_KINDS)
+    out["op_counts"] = count
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float
+    hlo_flops_total: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        return self.model_flops / max(self.hlo_flops_total, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful flop-time over the dominant term."""
+        useful_time = self.model_flops_per_device_s
+        return useful_time / max(self.total_s, 1e-30)
+
+    @property
+    def model_flops_per_device_s(self) -> float:
+        return self.model_flops / self.n_chips / PEAK_FLOPS if self.n_chips else 0.0
+
+    n_chips: int = 256
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.hlo_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "n_chips": self.n_chips,
+        }
+
+
+def analyze(compiled, n_chips: int, model_flops: float, hlo_text: str | None = None) -> Roofline:
+    """Trip-count-aware roofline terms (see hlo_cost.py for why not
+    cost_analysis(): XLA counts while/scan bodies once)."""
+    from repro.roofline.hlo_cost import module_cost
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = module_cost(text)
+    flops = cost.flops
+    nbytes = cost.bytes
+    r = Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=nbytes / HBM_BW,
+        collective_s=cost.collective_total / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective_bytes_per_device=cost.collective_total,
+        model_flops=model_flops,
+        hlo_flops_total=flops * n_chips,
+        n_chips=n_chips,
+    )
+    return r
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (prefill fwd-only) / 2·N·B per decode step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # one decode step

@@ -1,0 +1,59 @@
+"""Batched serving engine: prefill the prompt batch, then greedy/temperature
+decode with the per-family KV/state caches from models/transformer.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+
+
+def generate(model: Model, params, batch: dict, cfg: ServeConfig):
+    """batch['tokens']: (B, S_prompt) -> (B, S_prompt + max_new) tokens.
+
+    Prefill once, then `max_new_tokens` decode steps under jit (the decode
+    step is compiled once; positions are traced scalars).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_seq = s + cfg.max_new_tokens
+
+    prefill = jax.jit(lambda p, bt: model.prefill(p, bt, max_seq))
+    logits, cache = prefill(params, batch)
+    decode = jax.jit(model.decode_step)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    last_logits = logits[:, -1]
+    out = tokens
+
+    for i in range(cfg.max_new_tokens):
+        if cfg.temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, last_logits / cfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last_logits, axis=-1)
+        nxt = nxt[:, None].astype(jnp.int32)
+        out = jnp.concatenate([out, nxt], axis=1)
+        logits_step, cache = decode(params, cache, nxt, jnp.int32(s + i))
+        last_logits = logits_step[:, 0]
+    return out
+
+
+def perplexity(model: Model, params, batch: dict) -> float:
+    """Teacher-forced perplexity over a token batch (score-oriented metric)."""
+    logits, _ = jax.jit(model.forward)(params, batch)
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return float(jnp.exp(jnp.mean(nll)))

@@ -1,0 +1,91 @@
+"""Train-step factory: loss -> grads -> (clip, compress) -> AdamW."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Model
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Designed for jit with donated (params, opt_state).
+
+    ``microbatches > 1`` enables gradient accumulation (perf iteration A1,
+    EXPERIMENTS.md §Perf): the global batch is split along dim 0 and the
+    fwd+bwd runs as a scan, dividing peak activation memory by the microbatch
+    count at the cost of one extra f32 grad buffer.  Collective volume for the
+    gradient reduction is unchanged (grads are accumulated locally, reduced
+    once by the sharded optimizer update).
+    """
+
+    compute_dt = jnp.dtype(model.cfg.dtype)
+
+    def _cast_for_compute(params):
+        """f32 master params -> compute dtype *before* the layer stack, so
+        the FSDP all-gathers move bf16, not f32 (perf A4, §Perf).  Grads come
+        back in compute dtype and are accumulated/applied in f32."""
+        if compute_dt == jnp.float32:
+            return params
+        return jax.tree.map(
+            lambda p: p.astype(compute_dt)
+            if isinstance(p, jax.Array) and p.dtype == jnp.float32 and p.ndim >= 2
+            else p,
+            params,
+        )
+
+    def _grads(params, batch):
+        def loss_fn(pc, batch):
+            return model.loss(pc, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            _cast_for_compute(params), batch
+        )
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, metrics, grads = _grads(params, batch)
+        else:
+            from repro.parallel.sharding import shard
+
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                batch,
+            )
+            # keep the per-microbatch batch dim on the data axes (no-op
+            # without a sharding context)
+            mb = {
+                k: shard(v, None, "batch", *([None] * (v.ndim - 2)))
+                for k, v in mb.items()
+            }
+
+            def body(acc, one):
+                loss, metrics, grads = _grads(params, one)
+                acc = jax.tree.map(jnp.add, acc, (loss, metrics, grads))
+                return acc, None
+
+            zero_l, zero_m, zero_g = jax.eval_shape(_grads, params, jax.tree.map(lambda x: x[0], mb))
+            zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), (zero_l, zero_m, zero_g))
+            (loss, metrics, grads), _ = jax.lax.scan(body, zeros, mb)
+            inv = 1.0 / microbatches
+            loss, metrics, grads = jax.tree.map(
+                lambda x: (x * inv).astype(x.dtype), (loss, metrics, grads)
+            )
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step +
+prefill/decode consistency, asserting shapes and no NaNs.  (The FULL configs
+are exercised only via the AOT dry-run — see launch/dryrun.py.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import ASSIGNED_ARCHS, get_config, input_specs, reduce_config
+from repro.models.transformer import make_model
+
+B, S = 2, 32
+
+
+def _batch_for(cfg, key=jax.random.PRNGKey(0)):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(key, (B, cfg.num_patches, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = reduce_config(get_config(arch))
+            model = make_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch] = (cfg, model, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes_and_finite(arch, built):
+    cfg, model, params = built(arch)
+    batch = _batch_for(cfg)
+    logits, _ = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_decreases_loss(arch, built):
+    cfg, model, params = built(arch)
+    batch = _batch_for(cfg)
+
+    @jax.jit
+    def step(params):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        params = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+        return params, loss
+
+    params2, loss0 = step(params)
+    _, loss1 = step(params2)
+    assert bool(jnp.isfinite(loss0)) and bool(jnp.isfinite(loss1))
+    assert float(loss1) < float(loss0)  # one SGD step on the same batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_then_decode_matches_forward(arch, built):
+    """Teacher-forced decode must reproduce the training forward logits."""
+    cfg, model, params = built(arch)
+    batch = _batch_for(cfg)
+    full_logits, _ = jax.jit(model.forward)(params, batch)
+
+    prompt = S // 2
+    max_seq = S
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :prompt]
+    logits_p, cache = jax.jit(lambda p, b: model.prefill(p, b, max_seq))(
+        params, pre_batch
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32),
+        np.asarray(full_logits[:, :prompt], np.float32),
+        atol=0.2,  # bf16 accumulation-order differences across the two paths
+        rtol=0.05,
+    )
+
+    decode = jax.jit(model.decode_step)
+    errs = []
+    for t in range(prompt, min(prompt + 3, S)):
+        tok = batch["tokens"][:, t : t + 1]
+        logits_d, cache = decode(params, cache, tok, jnp.int32(t))
+        errs.append(
+            np.max(
+                np.abs(
+                    np.asarray(logits_d[:, 0], np.float32)
+                    - np.asarray(full_logits[:, t], np.float32)
+                )
+            )
+        )
+    assert max(errs) < 0.25, errs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_input_specs_complete(arch):
+    cfg = get_config(arch)
+    for kind, name in (("train", "train_4k"), ("decode", "decode_32k")):
+        shape = ShapeConfig(name, 64, 2, kind)
+        specs = input_specs(reduce_config(cfg), shape)
+        assert "tokens" in specs or "cache" in specs
+
+
+def test_param_counts_match_published_scale():
+    """Full configs should land near their nameplate parameter counts."""
+    expect = {
+        "deepseek-coder-33b": (30e9, 36e9),
+        "internlm2-1.8b": (1.5e9, 2.2e9),
+        "minicpm3-4b": (3e9, 5e9),
+        "stablelm-1.6b": (1.3e9, 2.0e9),
+        "mixtral-8x22b": (130e9, 150e9),
+        "xlstm-350m": (0.25e9, 0.5e9),
+        "zamba2-7b": (6e9, 9e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),
+        "whisper-large-v3": (1.2e9, 2.1e9),
+        "llama4-scout-17b-a16e": (95e9, 120e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,274 @@
+"""Core GN-Softmax / GN-LayerNorm behaviour tests + property tests.
+
+The paper's central invariants:
+  * Softmax:  |1 - sum p| ~ 0 regardless of approximation coarseness.
+  * LayerNorm: |1 - std(y)| ~ 0 via the CoRN Newton rsqrt.
+  * Approximations preserve ordering (rank) AND scores (normalization).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    exact_layernorm,
+    exact_softmax,
+    gn_layernorm,
+    gn_layernorm_hwsim,
+    gn_rmsnorm,
+    gn_softmax,
+    gn_softmax_hwsim,
+    newton_rsqrt,
+)
+from repro.core import baselines, metrics
+from repro.core.luts import (
+    PAPER_RSQRT,
+    PAPER_SOFTMAX_LUT,
+    TPU_SOFTMAX_LUT,
+    RsqrtConfig,
+    SoftmaxLUTConfig,
+    exp_luts,
+)
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ----------------------------------------------------------------- softmax --
+class TestGNSoftmax:
+    def test_normalization_guarantee_float(self):
+        x = jax.random.normal(KEY, (32, 128)) * 5.0
+        p = gn_softmax(x)
+        err = metrics.softmax_norm_error(p)
+        assert float(jnp.max(err)) < 1e-6  # paper Fig. 5: near-zero
+
+    def test_normalization_guarantee_hwsim(self):
+        x = jax.random.normal(KEY, (16, 64)) * 4.0
+        p = gn_softmax_hwsim(x)
+        err = metrics.softmax_norm_error(p)
+        # 24-bit rescale with round-to-nearest: err ~ sqrt(N)*2^-25
+        assert float(jnp.max(err)) < 1e-5
+
+    def test_close_to_exact(self):
+        x = jax.random.normal(KEY, (8, 256))
+        p = gn_softmax(x)
+        p_ref = exact_softmax(x)
+        assert float(jnp.max(jnp.abs(p - p_ref))) < 0.02
+
+    def test_order_preserved(self):
+        x = jax.random.normal(KEY, (64, 33)) * 3.0
+        p = np.asarray(gn_softmax(x))
+        xs = np.asarray(x)
+        # rank preservation up to grid ties: the true-argmax element must get
+        # the maximal probability (possibly tied after Δ-grid quantization)
+        rows = np.arange(64)
+        assert (p[rows, xs.argmax(-1)] >= p.max(-1) - 1e-9).all()
+
+    def test_factorization_exact_on_grid(self):
+        """Eq. 4: on-grid deltas give exactly-factorized exponentials."""
+        cfg = PAPER_SOFTMAX_LUT
+        coarse, residual = exp_luts(cfg)
+        for d in range(0, cfg.max_delta_int + 1):
+            a = coarse[d >> 3]
+            b = residual[d & 7]
+            want = np.exp(-float(d))
+            got = a * b
+            # error only from Q1.15 rounding of the two entries
+            assert abs(got - want) < 3e-5, (d, got, want)
+
+    def test_uniform_rows(self):
+        x = jnp.zeros((4, 100))
+        p = gn_softmax(x)
+        np.testing.assert_allclose(np.asarray(p), 1.0 / 100, rtol=1e-4)
+
+    def test_one_hot_limit(self):
+        x = jnp.array([[100.0, 0.0, 0.0, 0.0]])
+        p = np.asarray(gn_softmax(x))
+        assert p[0, 0] > 0.999
+        assert abs(p.sum() - 1) < 1e-6
+
+    def test_bf16_dtype(self):
+        x = jax.random.normal(KEY, (4, 64), dtype=jnp.bfloat16)
+        p = gn_softmax(x)
+        assert p.dtype == jnp.bfloat16
+        assert float(jnp.max(metrics.softmax_norm_error(p))) < 0.01
+
+    def test_grad_rows_sum_to_zero(self):
+        """Tangent of the guarantee: sum dp = 0."""
+        x = jax.random.normal(KEY, (4, 32))
+        v = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+        _, dp = jax.jvp(lambda x: gn_softmax(x), (x,), (v,))
+        assert float(jnp.max(jnp.abs(jnp.sum(dp, -1)))) < 1e-6
+
+    def test_grad_matches_exact_softmax_direction(self):
+        x = jax.random.normal(KEY, (4, 32))
+        g_gn = jax.grad(lambda x: -jnp.sum(jnp.log(gn_softmax(x)[..., 0])))(x)
+        g_ex = jax.grad(lambda x: -jnp.sum(jnp.log(exact_softmax(x)[..., 0])))(x)
+        cos = jnp.sum(g_gn * g_ex) / (jnp.linalg.norm(g_gn) * jnp.linalg.norm(g_ex))
+        assert float(cos) > 0.99
+
+    @pytest.mark.parametrize("n", [1, 2, 7, 128, 1000])
+    def test_shapes(self, n):
+        x = jax.random.normal(KEY, (3, n))
+        p = gn_softmax(x)
+        assert p.shape == (3, n)
+        assert float(jnp.max(metrics.softmax_norm_error(p))) < 1e-5
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        rows=st.integers(1, 5),
+        cols=st.integers(1, 300),
+        scale=st.floats(0.01, 30.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_sum_to_one(self, rows, cols, scale, seed):
+        """PROPERTY: sum p = 1 for arbitrary inputs and widths."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * scale
+        p = gn_softmax(x)
+        assert float(jnp.max(metrics.softmax_norm_error(p))) < 2e-6
+        assert bool(jnp.all(p >= 0))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        frac_bits=st.integers(0, 4),
+        scale=st.floats(0.05, 2.0),
+        seed=st.integers(0, 1000),
+    )
+    def test_property_guarantee_independent_of_approx_level(
+        self, frac_bits, scale, seed
+    ):
+        """Fig. 2's point: normalization error does NOT grow with coarser LUTs."""
+        cfg = SoftmaxLUTConfig(frac_bits=frac_bits, delta_scale=scale)
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 3.0
+        p = gn_softmax(x, cfg)
+        assert float(jnp.max(metrics.softmax_norm_error(p))) < 2e-6
+
+
+class TestBaselineSoftmaxes:
+    """The baselines must exhibit the normalization error the paper ascribes."""
+
+    def test_softermax_unnormalized(self):
+        x = jax.random.normal(KEY, (32, 128)) * 3.0
+        p = baselines.softermax(x)
+        err = metrics.softmax_norm_error(p)
+        gn_err = metrics.softmax_norm_error(gn_softmax(x))
+        assert float(jnp.mean(err)) > 10 * float(jnp.mean(gn_err))
+
+    def test_pseudo_softmax_unnormalized_but_ordered(self):
+        x = jax.random.normal(KEY, (32, 64)) * 3.0
+        p = baselines.pseudo_softmax(x)
+        err = metrics.softmax_norm_error(p)
+        assert float(jnp.max(err)) > 1e-3  # mantissa dropped => big score error
+        np.testing.assert_array_equal(
+            np.asarray(p).argmax(-1), np.asarray(x).argmax(-1)
+        )
+
+    def test_log_domain_unnormalized(self):
+        x = jax.random.normal(KEY, (32, 64)) * 3.0
+        err = metrics.softmax_norm_error(baselines.log_domain_softmax(x))
+        assert float(jnp.mean(err)) > 1e-4
+
+
+# --------------------------------------------------------------- layernorm --
+class TestGNLayerNorm:
+    def test_sigma_guarantee(self):
+        x = jax.random.normal(KEY, (64, 512)) * 7.0 + 3.0
+        y = gn_layernorm(x)
+        err = metrics.layernorm_norm_error(y)
+        assert float(jnp.max(err)) < 1e-5
+
+    def test_matches_exact(self):
+        x = jax.random.normal(KEY, (8, 256)) * 2.0
+        np.testing.assert_allclose(
+            np.asarray(gn_layernorm(x)), np.asarray(exact_layernorm(x)),
+            atol=2e-4, rtol=1e-4,
+        )
+
+    def test_gamma_beta(self):
+        x = jax.random.normal(KEY, (4, 64))
+        g = jnp.full((64,), 2.0)
+        b = jnp.full((64,), 0.5)
+        y = gn_layernorm(x, g, b)
+        y_ref = exact_layernorm(x, g, b)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-3)
+
+    def test_rmsnorm_variant(self):
+        x = jax.random.normal(KEY, (4, 128)) * 3.0
+        y = gn_rmsnorm(x)
+        ms = jnp.mean(jnp.square(y), axis=-1)
+        np.testing.assert_allclose(np.asarray(ms), 1.0, atol=1e-5)
+
+    def test_hwsim_sigma(self):
+        x = jax.random.normal(KEY, (16, 256)) * 3.0
+        y = gn_layernorm_hwsim(x)
+        err = metrics.layernorm_norm_error(y)
+        # Q8.8 output quantization floor
+        assert float(jnp.max(err)) < 2e-3
+
+    def test_newton_rsqrt_accuracy(self):
+        n = jnp.logspace(-6, 6, 500, dtype=jnp.float32)
+        r = newton_rsqrt(n)
+        rel = jnp.abs(r * jnp.sqrt(n) - 1.0)
+        assert float(jnp.max(rel)) < 1e-5  # paper: 2 Newton cycles suffice
+
+    def test_newton_rsqrt_iters_converge(self):
+        n = jnp.logspace(-4, 4, 100, dtype=jnp.float32)
+        errs = []
+        for it in range(4):
+            r = newton_rsqrt(n, RsqrtConfig(mantissa_bits=4, iters=it))
+            errs.append(float(jnp.max(jnp.abs(r * jnp.sqrt(n) - 1.0))))
+        assert errs[1] < errs[0] and errs[2] < errs[1]  # quadratic convergence
+
+    def test_grad_finite_and_correct_shape(self):
+        x = jax.random.normal(KEY, (4, 64))
+        g = jnp.ones((64,))
+        b = jnp.zeros((64,))
+        grads = jax.grad(lambda x, g, b: jnp.sum(gn_layernorm(x, g, b) ** 2), (0, 1, 2))(
+            x, g, b
+        )
+        for gr in grads:
+            assert bool(jnp.all(jnp.isfinite(gr)))
+
+    def test_grad_matches_exact_ln(self):
+        x = jax.random.normal(KEY, (4, 64))
+        g1 = jax.grad(lambda x: jnp.sum(jnp.sin(gn_layernorm(x))))(x)
+        g2 = jax.grad(lambda x: jnp.sum(jnp.sin(exact_layernorm(x))))(x)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-3)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        cols=st.integers(8, 1024),
+        scale=st.floats(0.01, 100.0),
+        shift=st.floats(-50.0, 50.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_unit_variance(self, cols, scale, shift, seed):
+        """PROPERTY: output std = 1 for arbitrary input distributions."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, cols)) * scale + shift
+        y = gn_layernorm(x)
+        # threshold = Newton error + the eps floor's contribution eps/(2 var)
+        var = float(jnp.min(jnp.var(x.astype(jnp.float32), axis=-1)))
+        tol = 1e-4 + 1e-8 / (2.0 * max(var, 1e-12))
+        assert float(jnp.max(metrics.layernorm_norm_error(y))) < tol
+
+
+class TestBaselineNorms:
+    def test_integer_ln_sigma_error(self):
+        x = jax.random.normal(KEY, (64, 256)) * 3.0
+        err = metrics.layernorm_norm_error(baselines.integer_layernorm(x))
+        gn_err = metrics.layernorm_norm_error(gn_layernorm(x))
+        assert float(jnp.mean(err)) > 100 * float(jnp.mean(gn_err))
+        assert float(jnp.max(err)) < 0.5  # but bounded by sqrt2-ish
+
+    def test_lut_ln_sigma_error(self):
+        x = jax.random.normal(KEY, (64, 256)) * 3.0
+        err = metrics.layernorm_norm_error(baselines.lut_layernorm(x))
+        assert 1e-5 < float(jnp.mean(err)) < 0.05
+
+
+class TestMetrics:
+    def test_histogram(self):
+        h = metrics.error_histogram(np.array([0.0, 1e-7, 1e-3]))
+        assert abs(sum(h["fraction"]) - 1.0) < 1e-9
+        assert h["frac_below_0.2e-6"] == pytest.approx(2 / 3)

@@ -1,0 +1,33 @@
+"""Multi-device integration tests (subprocess: 8 fake host devices).
+
+The smoke/bench processes must see 1 device, so everything multi-device runs
+in a child process with its own XLA_FLAGS (same pattern as launch/dryrun.py).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(arch: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-W", "ignore", str(REPO / "tests" / "distributed_check.py"), arch],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"
+    assert "ALL_DISTRIBUTED_CHECKS_PASSED" in r.stdout
+    return r.stdout
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "mixtral-8x22b"])
+def test_sharded_training_and_elastic_restore(arch):
+    out = _run(arch)
+    assert "SPMD forward == single-device forward: OK" in out
+    assert "elastic re-mesh (2,4)->(4,2) restore + step: OK" in out

@@ -1,0 +1,273 @@
+"""Calibration of the trip-count-aware HLO cost model (roofline/hlo_cost.py).
+
+Oracle: XLA's own ``cost_analysis()`` on *loop-free* programs.  The whole
+reason hlo_cost exists is that cost_analysis counts while bodies once; these
+tests pin (a) agreement on unrolled programs, (b) trip-count scaling on
+scanned programs against the unrolled oracle, (c) collective scaling.
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    pass  # tests run single-device; the sharded test builds its own tiny mesh
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_cost import module_cost, parse_hlo_computations
+
+
+def _xla_cost(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+class TestLoopFree:
+    def test_matmul_chain_flops_match_xla(self):
+        def f(x):
+            for _ in range(4):
+                x = x @ x
+            return x
+
+        c = _compile(f, jax.ShapeDtypeStruct((256, 256), jnp.float32))
+        xla_flops, _ = _xla_cost(c)
+        mine = module_cost(c.as_text())
+        # dots dominate; elementwise bookkeeping differs by <2%
+        assert mine.flops == pytest.approx(xla_flops, rel=0.02)
+
+    def test_matmul_exact_dot_flops(self):
+        def f(a, b):
+            return a @ b
+
+        c = _compile(
+            f,
+            jax.ShapeDtypeStruct((128, 512), jnp.float32),
+            jax.ShapeDtypeStruct((512, 64), jnp.float32),
+        )
+        mine = module_cost(c.as_text())
+        assert mine.flops == pytest.approx(2 * 128 * 512 * 64, rel=0.01)
+
+    def test_batched_dot_flops(self):
+        def f(a, b):
+            return jnp.einsum("bij,bjk->bik", a, b)
+
+        c = _compile(
+            f,
+            jax.ShapeDtypeStruct((8, 64, 128), jnp.float32),
+            jax.ShapeDtypeStruct((8, 128, 32), jnp.float32),
+        )
+        mine = module_cost(c.as_text())
+        assert mine.flops == pytest.approx(2 * 8 * 64 * 128 * 32, rel=0.01)
+
+    def test_bytes_same_order_as_xla(self):
+        def f(a, b):
+            return jnp.tanh(a @ b)
+
+        c = _compile(
+            f,
+            jax.ShapeDtypeStruct((512, 512), jnp.float32),
+            jax.ShapeDtypeStruct((512, 512), jnp.float32),
+        )
+        xla_flops, xla_bytes = _xla_cost(c)
+        mine = module_cost(c.as_text())
+        assert 0.5 * xla_bytes <= mine.bytes <= 2.0 * xla_bytes
+
+
+class TestTripCountScaling:
+    def test_scan_matches_unrolled_oracle(self):
+        L = 8
+
+        def body(x, _):
+            return jnp.tanh(x @ x), None
+
+        def f_scan(x):
+            y, _ = jax.lax.scan(body, x, None, length=L)
+            return y
+
+        def f_unroll(x):
+            for _ in range(L):
+                x = jnp.tanh(x @ x)
+            return x
+
+        s = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        c_scan = _compile(f_scan, s)
+        c_unroll = _compile(f_unroll, s)
+
+        oracle_flops, _ = _xla_cost(c_unroll)
+        naive_flops, _ = _xla_cost(c_scan)
+        mine = module_cost(c_scan.as_text())
+
+        # the bug we're fixing: XLA counts the body once
+        assert naive_flops < oracle_flops / (L - 1)
+        # our model recovers the unrolled total
+        assert mine.flops == pytest.approx(oracle_flops, rel=0.05)
+
+    def test_nested_scan(self):
+        def inner(x, _):
+            return x @ x, None
+
+        def outer(x, _):
+            y, _ = jax.lax.scan(inner, x, None, length=3)
+            return y, None
+
+        def f(x):
+            y, _ = jax.lax.scan(outer, x, None, length=5)
+            return y
+
+        c = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        mine = module_cost(c.as_text())
+        expect = 15 * 2 * 128**3  # 5 x 3 matmuls
+        assert mine.flops == pytest.approx(expect, rel=0.05)
+
+    def test_trip_count_parsed(self):
+        def body(x, _):
+            return x + 1.0, None
+
+        def f(x):
+            y, _ = jax.lax.scan(body, x, None, length=17)
+            return y
+
+        c = _compile(f, jax.ShapeDtypeStruct((64,), jnp.float32))
+        comps, entry = parse_hlo_computations(c.as_text())
+        assert entry
+        trips = [
+            i.trip_count()
+            for comp in comps.values()
+            for i in comp
+            if i.opcode == "while"
+        ]
+        assert 17 in trips
+
+
+class TestTpuNativeAdjustment:
+    def test_bf16_dot_costed_native(self):
+        """XLA:CPU legalizes bf16 dots via f32 converts; tpu_native accounting
+        must price the dot at bf16 operand/output sizes and the convert
+        fusions at zero."""
+
+        def f(a, b):
+            return a @ b
+
+        s = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
+        c = _compile(f, s, s)
+        native = module_cost(c.as_text())
+        # 3 buffers x 256^2 x 2B (a, b, out) = 393216
+        assert native.bytes == pytest.approx(3 * 256 * 256 * 2, rel=0.05)
+
+        from repro.roofline.hlo_cost import HloCostModel
+
+        raw = HloCostModel(c.as_text(), tpu_native=False).module_cost()
+        assert raw.bytes > 2.5 * native.bytes  # the artifact being removed
+
+    def test_f32_traffic_untouched(self):
+        def f(a, b):
+            return a @ b
+
+        s = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        c = _compile(f, s, s)
+        native = module_cost(c.as_text())
+        assert native.bytes == pytest.approx(3 * 256 * 256 * 4, rel=0.05)
+
+
+class TestCollectives:
+    @pytest.fixture(scope="class")
+    def mesh8(self):
+        if jax.device_count() < 8:
+            pytest.skip("needs 8 host devices (run under dryrun env)")
+        return jax.make_mesh((8,), ("d",))
+
+    def test_psum_bytes_counted(self):
+        # single-device fallback: parse a synthetic HLO line instead
+        hlo = """
+HloModule test
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%p0), channel_id=1, replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+        c = module_cost(hlo)
+        assert c.collective["all-reduce"] == pytest.approx(2 * 1024 * 4)
+
+    def test_collective_in_loop_scaled(self):
+        hlo = """
+HloModule test
+
+%body (p: (s32[], f32[256])) -> (s32[], f32[256]) {
+  %p = (s32[], f32[256]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[256]{0} get-tuple-element(%p), index=1
+  %ag = f32[1024]{0} all-gather(%x), channel_id=1, replica_groups={{0,1,2,3}}, dimensions={0}
+  %y = f32[256]{0} slice(%ag), slice={[0:256]}
+  %c1 = s32[] constant(1)
+  %ni = s32[] add(%i, %c1)
+  ROOT %t = (s32[], f32[256]{0}) tuple(%ni, %y)
+}
+
+%cond (p: (s32[], f32[256])) -> pred[] {
+  %p = (s32[], f32[256]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %lim), direction=LT
+}
+
+ENTRY %main (p0: f32[256]) -> f32[256] {
+  %p0 = f32[256]{0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t = (s32[], f32[256]{0}) tuple(%c0, %p0)
+  %w = (s32[], f32[256]{0}) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[256]{0} get-tuple-element(%w), index=1
+}
+"""
+        c = module_cost(hlo)
+        # all-gather output is 1024 f32 = 4096 B, x10 iterations
+        assert c.collective["all-gather"] == pytest.approx(10 * 4096)
+        assert not c.warnings
+
+
+class TestEndToEndModel:
+    def test_smoke_model_flops_sane(self):
+        """A reduced dense model's HLO flops >= analytic 2*N*D (fwd)."""
+        from repro.configs.registry import get_config, reduce_config
+        from repro.models.transformer import make_model
+
+        cfg = reduce_config(get_config("internlm2-1.8b"))
+        model = make_model(cfg)
+        b, s = 2, 32
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        params = model.param_structs()
+
+        def fwd(p, t):
+            logits, _ = model.forward(p, {"tokens": t})
+            return logits
+
+        c = jax.jit(fwd).lower(params, tokens).compile()
+        mine = module_cost(c.as_text())
+        analytic = 2.0 * cfg.param_count() * b * s
+        # forward flops should be within [0.5x, 4x] of 2*N*D for a tiny model
+        # (embedding gather contributes no flops; attention adds seq^2 terms)
+        assert mine.flops > 0.3 * analytic
+        assert mine.flops < 6.0 * analytic
+
+
+class TestInPlaceUpdatePricing:
+    def test_donated_cache_update_priced_at_slice(self):
+        """A jit-donated buffer updated via dynamic_update_slice must cost
+        ~2x the update window, not 2x the buffer (the KV-cache pattern)."""
+
+        def step(cache, new):
+            return jax.lax.dynamic_update_slice(cache, new, (5, 0))
+
+        cache = jax.ShapeDtypeStruct((4096, 256), jnp.float32)
+        new = jax.ShapeDtypeStruct((1, 256), jnp.float32)
+        c = jax.jit(step, donate_argnums=(0,)).lower(cache, new).compile()
+        cost = module_cost(c.as_text())
+        buffer_bytes = 4096 * 256 * 4
+        assert cost.bytes < 0.05 * buffer_bytes  # slice-sized, not buffer-sized
