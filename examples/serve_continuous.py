@@ -1,0 +1,71 @@
+"""Continuous batching with the GN non-GEMM datapath — a serving timeline.
+
+A synthetic staggered-arrival workload (mixed prompt lengths, mixed decode
+budgets) streams through the FCFS scheduler + slot-paged KV pool + jit-once
+masked decode engine.  The demo prints the admission/completion timeline so
+you can watch requests join and leave the running batch without any
+recompilation, then cross-checks greedy outputs against the static engine.
+
+Run:  PYTHONPATH=src python examples/serve_continuous.py [--arch internlm2-1.8b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config, list_archs, reduce_config
+from repro.models.transformer import make_model
+from repro.serve.engine import ContinuousEngine, ServeConfig, static_reference
+from repro.serve.workload import required_max_seq, staggered_requests
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=9)
+    ap.add_argument("--num-slots", type=int, default=3)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch))
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = staggered_requests(cfg, n_requests=args.requests, base_len=16,
+                              max_new_tokens=args.new_tokens, stagger=2, seed=3)
+    engine = ContinuousEngine(model, params, num_slots=args.num_slots,
+                              max_seq=required_max_seq(reqs), cfg=ServeConfig())
+    for r in reqs:
+        engine.submit(r)
+
+    print(f"{args.requests} requests / {args.num_slots} slots "
+          f"(prompt lens {sorted({r.prompt_len for r in reqs})}, "
+          f"max_new {sorted({r.max_new_tokens for r in reqs})})\n")
+    done = 0
+    t0 = time.time()
+    while engine.step():
+        newly = engine.completions[done:]
+        done = len(engine.completions)
+        live = sum(s is not None for s in engine._slots)
+        marks = "".join("#" if s is not None else "." for s in engine._slots)
+        fin = " ".join(f"req{c.request_id}[{c.finish_reason}]" for c in newly)
+        print(f"step {engine.step_count - 1:3d}  slots [{marks}] "
+              f"active={live}" + (f"  finished: {fin}" if fin else ""))
+    dt = time.time() - t0
+
+    m = engine.metrics()
+    print(f"\nserved {m['completions']} requests, {m['generated_tokens']} tokens "
+          f"in {dt:.2f}s ({m['generated_tokens']/dt:.1f} tok/s)")
+    print(f"slot utilization {m['mean_slot_utilization']*100:.0f}%  "
+          f"decode compilations {m['decode_compilations']} (jit-once)")
+    lat = [c.latency_s for c in engine.completions]
+    print(f"latency p50 {np.median(lat)*1e3:.0f}ms  max {max(lat)*1e3:.0f}ms")
+
+    ref = static_reference(model, params, reqs, ServeConfig())
+    same = all(np.array_equal(c.tokens, ref[c.request_id])
+               for c in engine.completions)
+    print(f"greedy outputs token-identical to the static engine: {same}")
+
+
+if __name__ == "__main__":
+    main()

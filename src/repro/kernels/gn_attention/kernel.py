@@ -28,6 +28,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT
 from repro.kernels.common import exp_lut_operands, factorized_exp, snap_up_to_grid
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4/0.5; accept both.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -194,7 +197,7 @@ def gn_attention_pallas(
             pltpu.VMEM((block_q, 128), jnp.float32),
             pltpu.VMEM((block_q, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

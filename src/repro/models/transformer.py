@@ -379,6 +379,61 @@ class Model:
             lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(batch, max_seq)
         )
 
+    # ------------------------------------------------- slot-cache helpers ---
+    def cache_batch_axes(self):
+        """Tree parallel to ``cache_specs`` giving the batch-axis index of
+        every cache leaf (derived from ``cache_logical_axes``).  The serving
+        engine treats the batch dim as a *slot* dim; these indices drive the
+        per-slot insert/extract below and the vmapped multi-position decode."""
+        return jax.tree.map(
+            lambda ax: ax.index("batch"),
+            self.cache_logical_axes(),
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+    def insert_cache_slot(self, pool_cache, request_cache, slot):
+        """Write a single-request cache (batch dim 1, same max_seq layout)
+        into slot ``slot`` of a pool cache (batch dim = num_slots).  ``slot``
+        may be a traced scalar, so one jit covers every slot."""
+
+        def upd(dst, src, ax):
+            starts = tuple(slot if i == ax else 0 for i in range(dst.ndim))
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), starts)
+
+        return jax.tree.map(upd, pool_cache, request_cache, self.cache_batch_axes())
+
+    def extract_cache_slot(self, pool_cache, slot):
+        """Read slot ``slot`` back out as a single-request (batch=1) cache."""
+
+        def ext(src, ax):
+            starts = tuple(slot if i == ax else 0 for i in range(src.ndim))
+            sizes = tuple(1 if i == ax else d for i, d in enumerate(src.shape))
+            return jax.lax.dynamic_slice(src, starts, sizes)
+
+        return jax.tree.map(ext, pool_cache, self.cache_batch_axes())
+
+    def decode_step_slots(self, params, cache, tokens, positions):
+        """Per-slot decode for continuous batching: like ``decode_step`` but
+        every batch row carries its *own* position.  tokens: (N, 1) int32;
+        positions: (N,) int32.  Returns (logits (N, 1, V), new cache).
+
+        Implemented as a vmap of the single-sequence decode over the cache's
+        batch axes, so every family's decode path (dense/mla/ssm/hybrid/
+        encdec/vlm) is reused unchanged and numerics match the static engine.
+        """
+        axes = self.cache_batch_axes()
+
+        def one(c, t, pos):
+            # vmap strips the mapped batch axis; decode_step wants batch=1.
+            c = jax.tree.map(jnp.expand_dims, c, axes)
+            logits, nc = self.decode_step(params, c, t[None], pos)
+            nc = jax.tree.map(jnp.squeeze, nc, axes)
+            return logits[0], nc
+
+        return jax.vmap(one, in_axes=(axes, 0, 0), out_axes=(0, axes))(
+            cache, tokens, positions
+        )
+
     # ----------------------------------------------------------- prefill ---
     def prefill(self, params, batch: dict, max_seq: int | None = None):
         """Prompt pass.  Returns (full-seq logits, decode-ready cache)."""

@@ -315,6 +315,9 @@ class HloCostModel:
                 self._pure_convert[name] = (src or "", dst or "")
 
     def _is_pure_convert_fusion(self, instr: Instr) -> bool:
+        if instr.opcode == "convert":
+            # newer XLA:CPU schedules leave legalization converts unfused
+            return True
         if instr.opcode != "fusion":
             return False
         callee = instr.called("calls")

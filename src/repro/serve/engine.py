@@ -1,14 +1,37 @@
-"""Batched serving engine: prefill the prompt batch, then greedy/temperature
-decode with the per-family KV/state caches from models/transformer.py.
+"""Serving engines for the GN non-GEMM datapath.
+
+Two paths share the per-family caches from ``models/transformer.py``:
+
+* ``generate`` — the original *static* batch engine (every request in the
+  batch shares a prompt length, everyone decodes to ``max_new_tokens``).
+  It stays as the correctness oracle: greedy continuous batching must be
+  token-identical to it.  Decode writes into a preallocated output buffer
+  (O(n) — the old per-token ``jnp.concatenate`` re-copied the whole buffer
+  every step).
+
+* ``ContinuousEngine`` — continuous batching over a ``SlotKVPool``.  The
+  decode step is jitted ONCE over the fixed slot set: per-slot positions,
+  per-slot temperatures and an active mask are traced arrays, so requests
+  joining and leaving never trigger recompilation.  Prefill compiles per
+  distinct prompt length (shape-polymorphic prompts are outside jit's
+  vocabulary); the decode loop is where continuous batching lives.
+
+Layering: scheduler (admission) -> kv_cache (slot residency) -> engine
+(this file: sampling, stop conditions, metrics).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.transformer import Model
+from repro.serve.kv_cache import SlotKVPool
+from repro.serve.scheduler import Completion, FCFSScheduler, Request
 
 
 @dataclasses.dataclass
@@ -18,23 +41,36 @@ class ServeConfig:
     seed: int = 0
 
 
+# ---------------------------------------------------------------- static ---
+def _static_jits(model: Model, max_seq: int):
+    """Per-model cache of the static path's jitted prefill/decode, so repeated
+    ``generate`` calls (benchmarks, the static oracle) don't re-trace."""
+    cache = model.__dict__.setdefault("_serve_jits", {})
+    if "decode" not in cache:
+        cache["decode"] = jax.jit(model.decode_step)
+    key = ("prefill", max_seq)
+    if key not in cache:
+        cache[key] = jax.jit(lambda p, bt: model.prefill(p, bt, max_seq))
+    return cache[key], cache["decode"]
+
+
 def generate(model: Model, params, batch: dict, cfg: ServeConfig):
     """batch['tokens']: (B, S_prompt) -> (B, S_prompt + max_new) tokens.
 
-    Prefill once, then `max_new_tokens` decode steps under jit (the decode
+    Prefill once, then ``max_new_tokens`` decode steps under jit (the decode
     step is compiled once; positions are traced scalars).
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
     max_seq = s + cfg.max_new_tokens
 
-    prefill = jax.jit(lambda p, bt: model.prefill(p, bt, max_seq))
+    prefill, decode = _static_jits(model, max_seq)
     logits, cache = prefill(params, batch)
-    decode = jax.jit(model.decode_step)
 
     key = jax.random.PRNGKey(cfg.seed)
     last_logits = logits[:, -1]
-    out = tokens
+    out = jnp.zeros((b, max_seq), jnp.int32)
+    out = jax.lax.dynamic_update_slice(out, tokens.astype(jnp.int32), (0, 0))
 
     for i in range(cfg.max_new_tokens):
         if cfg.temperature > 0:
@@ -43,7 +79,7 @@ def generate(model: Model, params, batch: dict, cfg: ServeConfig):
         else:
             nxt = jnp.argmax(last_logits, axis=-1)
         nxt = nxt[:, None].astype(jnp.int32)
-        out = jnp.concatenate([out, nxt], axis=1)
+        out = jax.lax.dynamic_update_slice(out, nxt, (0, s + i))
         logits_step, cache = decode(params, cache, nxt, jnp.int32(s + i))
         last_logits = logits_step[:, 0]
     return out
@@ -57,3 +93,230 @@ def perplexity(model: Model, params, batch: dict) -> float:
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
     return float(jnp.exp(jnp.mean(nll)))
+
+
+def static_reference(model: Model, params, requests: Sequence[Request],
+                     cfg: ServeConfig) -> dict[int, np.ndarray]:
+    """Serve ``requests`` through the static engine: group by (prompt_len,
+    max_new_tokens) in FCFS order, one ``generate`` call per group.  Returns
+    request id -> full (prompt + generated) token array, truncated at a
+    request's stop token if it has one (the static engine itself always
+    decodes the full budget).  This is both the greedy-identity oracle and
+    the static baseline in benchmarks — greedy only, since sampled paths use
+    different key streams per engine."""
+    if any(r.temperature not in (None, 0, 0.0) for r in requests) or cfg.temperature:
+        raise ValueError("static_reference is a greedy oracle (temperature 0 only)")
+    groups: dict[tuple, list[Request]] = {}
+    for req in requests:
+        groups.setdefault((req.prompt_len, req.max_new_tokens), []).append(req)
+    out: dict[int, np.ndarray] = {}
+    for (plen, max_new), reqs in groups.items():
+        batch = {"tokens": jnp.stack([jnp.asarray(r.tokens, jnp.int32) for r in reqs])}
+        for k in reqs[0].extras:
+            batch[k] = jnp.stack([jnp.asarray(r.extras[k]) for r in reqs])
+        gcfg = dataclasses.replace(cfg, max_new_tokens=max_new)
+        toks = np.asarray(generate(model, params, batch, gcfg))
+        for r, row in zip(reqs, toks):
+            if r.stop_token is not None:
+                hits = np.nonzero(row[plen:] == r.stop_token)[0]
+                if hits.size:
+                    row = row[: plen + hits[0] + 1]
+            out[r.id] = row
+    return out
+
+
+# ------------------------------------------------------------ continuous ---
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    admit_step: int
+    admit_time: float
+    generated: list
+    first_token_step: int = -1
+    first_token_time: float = 0.0
+
+
+class ContinuousEngine:
+    """Continuous-batching engine over a fixed slot set.
+
+    Per engine tick: admit waiting requests into free slots (prefill + slot
+    page-in), then run ONE masked decode over all ``num_slots`` slots —
+    inactive slots compute dont-care lanes that are never committed (their
+    cache is fully overwritten at the next admission).  Greedy outputs are
+    token-identical to the static ``generate`` path.
+    """
+
+    def __init__(self, model: Model, params, num_slots: int, max_seq: int,
+                 cfg: ServeConfig = ServeConfig(),
+                 scheduler: Optional[FCFSScheduler] = None):
+        self.model, self.params, self.cfg = model, params, cfg
+        self.num_slots, self.max_seq = int(num_slots), int(max_seq)
+        self.pool = SlotKVPool(model, num_slots, max_seq)
+
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, self.max_seq))
+        self._decode = jax.jit(self._decode_sample)
+        self._set_row = jax.jit(
+            lambda buf, row, i: jax.lax.dynamic_update_slice(
+                buf, row[None].astype(buf.dtype), (i, 0)
+            )
+        )
+        self.reset(scheduler)
+
+    def reset(self, scheduler: Optional[FCFSScheduler] = None) -> None:
+        """Clear all serving state but keep compiled functions and the pool
+        allocation (benchmarks re-run the same workload without recompiling).
+        The pool's slot order is restored too, so a reset run replays a
+        workload with identical slot assignment (and, for sampled requests,
+        identical per-slot key streams)."""
+        self.pool.reset()
+        vocab = self.model.cfg.vocab
+        # device-resident held logits; positions live host-side in the pool
+        # (single source of truth), active/temps derive from _slots at step
+        self._last_logits = jnp.zeros((self.num_slots, vocab), jnp.float32)
+        self._temps = np.zeros(self.num_slots, np.float32)
+        self._slots: list[Optional[_SlotState]] = [None] * self.num_slots
+        self._key = jax.random.PRNGKey(self.cfg.seed)
+        self.step_count = 0
+        self.completions: list[Completion] = []
+        self._active_steps = 0   # sum over decode steps of active-slot count
+        self._decode_steps = 0
+        self._generated = 0
+        self.scheduler = scheduler or FCFSScheduler()
+
+    # ---------------------------------------------------------- jitted step --
+    def _decode_sample(self, params, cache, last_logits, positions, active,
+                       temps, key):
+        """Sample one token per slot from the held logits, then decode it.
+        Everything per-slot is a traced array -> a single compilation."""
+        greedy = jnp.argmax(last_logits, axis=-1)
+        tsafe = jnp.where(temps > 0, temps, 1.0)
+        keys = jax.random.split(key, self.num_slots)
+        sampled = jax.vmap(jax.random.categorical)(keys, last_logits / tsafe[:, None])
+        nxt = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, 0)
+        pos = jnp.where(active, positions, 0)  # clamp dont-care lanes in range
+        logits, ncache = self.model.decode_step_slots(params, cache, nxt[:, None], pos)
+        new_last = jnp.where(
+            active[:, None], logits[:, 0].astype(jnp.float32), last_logits
+        )
+        return nxt, new_last, ncache
+
+    # ------------------------------------------------------------ admission --
+    def submit(self, req: Request) -> int:
+        return self.scheduler.submit(req)
+
+    def _admit(self) -> list[int]:
+        admitted = []
+        while self.pool.num_free:
+            req = self.scheduler.pop_ready(self.step_count)
+            if req is None:
+                break
+            if req.prompt_len + req.max_new_tokens > self.max_seq:
+                raise ValueError(
+                    f"request {req.id}: prompt {req.prompt_len} + "
+                    f"{req.max_new_tokens} new tokens exceeds max_seq {self.max_seq}"
+                )
+            slot = self.pool.allocate()
+            batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None]}
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(v)[None]
+            logits, cache = self._prefill(self.params, batch)
+            self.pool.insert(cache, slot, req.prompt_len)
+            self._last_logits = self._set_row(self._last_logits, logits[0, -1], slot)
+            temp = self.cfg.temperature if req.temperature is None else req.temperature
+            self._temps[slot] = float(temp)
+            self._slots[slot] = _SlotState(
+                req=req, admit_step=self.step_count,
+                admit_time=time.time(), generated=[],
+            )
+            admitted.append(req.id)
+        return admitted
+
+    def _finish(self, slot: int, reason: str) -> None:
+        st = self._slots[slot]
+        now = time.time()
+        self.completions.append(Completion(
+            request_id=st.req.id,
+            prompt_tokens=np.asarray(st.req.tokens, np.int32),
+            new_tokens=np.asarray(st.generated, np.int32),
+            finish_reason=reason,
+            arrival_step=st.req.arrival_step,
+            admit_step=st.admit_step,
+            first_token_step=st.first_token_step,
+            finish_step=self.step_count,
+            admit_time=st.admit_time,
+            first_token_time=st.first_token_time,
+            finish_time=now,
+        ))
+        self._slots[slot] = None
+        self.pool.free(slot)
+
+    # ----------------------------------------------------------- main loop --
+    def step(self) -> bool:
+        """One engine tick.  Returns False once fully drained (no active
+        slot, nothing queued)."""
+        self._admit()
+        live = [s for s, st in enumerate(self._slots) if st is not None]
+        if not live:
+            if self.scheduler.has_pending():
+                self.step_count += 1  # idle tick: waiting on a future arrival
+                return True
+            return False
+
+        self._key, sub = jax.random.split(self._key)
+        active = np.array([st is not None for st in self._slots])
+        nxt, self._last_logits, self.pool.cache = self._decode(
+            self.params, self.pool.cache, self._last_logits,
+            self.pool.positions, active, self._temps, sub,
+        )
+        toks = np.asarray(nxt)
+        self.pool.advance(live)
+        self._active_steps += len(live)
+        self._decode_steps += 1
+        self._generated += len(live)
+        for slot in live:
+            st = self._slots[slot]
+            tok = int(toks[slot])
+            st.generated.append(tok)
+            if len(st.generated) == 1:
+                st.first_token_step = self.step_count
+                st.first_token_time = time.time()
+            reason = None
+            if st.req.stop_token is not None and tok == st.req.stop_token:
+                reason = "stop"
+            elif len(st.generated) >= st.req.max_new_tokens:
+                reason = "length"
+            if reason:
+                self._finish(slot, reason)
+        self.step_count += 1
+        return True
+
+    def run(self, requests: Sequence[Request]) -> list[Completion]:
+        """Serve a workload to completion; returns completions in finish
+        order."""
+        for req in requests:
+            self.submit(req)
+        budget = 10_000 + sum(r.arrival_step + r.max_new_tokens for r in requests)
+        while self.step():
+            if self.step_count > budget:
+                raise RuntimeError("ContinuousEngine failed to drain workload")
+        return self.completions
+
+    # -------------------------------------------------------------- metrics --
+    def metrics(self) -> dict:
+        util = self._active_steps / max(1, self._decode_steps * self.num_slots)
+        return {
+            "decode_steps": self._decode_steps,
+            "generated_tokens": self._generated,
+            "mean_slot_utilization": util,
+            "completions": len(self.completions),
+            "decode_compilations": _jit_compilations(self._decode),
+            "prefill_compilations": _jit_compilations(self._prefill),
+        }
+
+
+def _jit_compilations(fn) -> Optional[int]:
+    """Compilation count of a jitted callable, or None if jax's (private)
+    cache-size probe is unavailable on this version."""
+    probe = getattr(fn, "_cache_size", None)
+    return probe() if callable(probe) else None

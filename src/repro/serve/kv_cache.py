@@ -1,0 +1,88 @@
+"""Slot-paged KV/state cache pool for continuous batching.
+
+One device-resident cache tree sized for ``num_slots`` sequences; the batch
+dim of every leaf is reinterpreted as a *slot* dim.  A request is prefetched
+into a free slot (single ``dynamic_update_slice`` per leaf, slot index
+traced so one compilation covers all slots), decoded in place by the
+engine's masked decode, and its slot is recycled the step it finishes.
+
+The per-family cache layouts (dense k/v, MLA latent, SSM carries, hybrid
+shared-attention kv, encdec cross kv, vlm patches) are all handled
+generically through ``Model.cache_batch_axes`` — this file never looks
+inside the tree.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import numpy as np
+
+
+class SlotKVPool:
+    """Fixed-capacity slot pool over ``model.init_cache(num_slots, max_seq)``.
+
+    Tracks per-slot absolute position (next KV write index) host-side and
+    slot residency (free list is FIFO so slot reuse order is deterministic).
+    """
+
+    def __init__(self, model, num_slots: int, max_seq: int):
+        self.model = model
+        self.num_slots = int(num_slots)
+        self.max_seq = int(max_seq)
+        self.cache = model.init_cache(self.num_slots, self.max_seq)
+        self.positions = np.zeros(self.num_slots, np.int32)
+        self._free: deque[int] = deque(range(self.num_slots))
+        self._used: set[int] = set()
+        self._insert = jax.jit(model.insert_cache_slot)
+        self._extract = jax.jit(model.extract_cache_slot)
+
+    # ------------------------------------------------------------ residency --
+    def reset(self) -> None:
+        """Free everything and restore the canonical slot order, so a reset
+        engine assigns slots exactly like a fresh one (replay determinism)."""
+        self.positions[:] = 0
+        self._free = deque(range(self.num_slots))
+        self._used.clear()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+    def allocate(self) -> int:
+        if not self._free:
+            raise RuntimeError("SlotKVPool exhausted: no free slot")
+        slot = self._free.popleft()
+        self._used.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used.remove(slot)
+        self.positions[slot] = 0
+        self._free.append(slot)
+
+    # ------------------------------------------------------------- contents --
+    def insert(self, request_cache, slot: int, position: int) -> None:
+        """Page a prefilled single-request cache into ``slot``; ``position``
+        is the request's next decode position (its prompt length)."""
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        if position > self.max_seq:
+            raise ValueError(f"position {position} exceeds max_seq {self.max_seq}")
+        self.cache = self._insert(self.cache, request_cache, slot)
+        self.positions[slot] = position
+
+    def extract(self, slot: int):
+        """Read a slot back out as a batch=1 cache (debug/migration path)."""
+        return self._extract(self.cache, slot)
+
+    def advance(self, slots) -> None:
+        """Advance the positions of the given slots by one decoded token."""
+        for slot in slots:
+            self.positions[slot] += 1

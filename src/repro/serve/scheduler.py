@@ -1,0 +1,106 @@
+"""Request/Completion API + FCFS admission scheduler for continuous batching.
+
+The scheduler is deliberately dumb and deterministic: requests are admitted
+strictly in submission order, each as soon as (a) its arrival step has been
+reached on the engine clock and (b) a KV-cache slot is free.  The engine
+clock is the decode-step counter, so synthetic staggered-arrival workloads
+replay bit-identically — the property every serving test here leans on.
+
+Layering (see ROADMAP.md §Serving):  scheduler (this file, admission policy)
+-> kv_cache.SlotKVPool (slot-paged KV/state residency) -> engine
+(ContinuousEngine, the jit-once masked decode loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``tokens`` is the prompt, shape (prompt_len,).
+
+    ``extras`` carries per-request modality stubs without a batch dim
+    (``frames`` for encdec, ``patches`` for vlm); the engine adds the batch
+    axis at prefill.  ``arrival_step`` stamps when the request becomes
+    visible on the engine's decode-step clock (0 = already waiting).
+    """
+
+    tokens: np.ndarray
+    max_new_tokens: int = 16
+    temperature: Optional[float] = None  # None -> engine default
+    stop_token: Optional[int] = None
+    arrival_step: int = 0
+    extras: dict = dataclasses.field(default_factory=dict)
+    id: int = -1  # assigned by the scheduler on submit
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request plus its serving telemetry (steps = engine clock)."""
+
+    request_id: int
+    prompt_tokens: np.ndarray
+    new_tokens: np.ndarray
+    finish_reason: str  # 'length' | 'stop'
+    arrival_step: int
+    admit_step: int
+    first_token_step: int
+    finish_step: int
+    admit_time: float
+    first_token_time: float
+    finish_time: float
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Full sequence (prompt + generated), the static-engine layout."""
+        return np.concatenate([self.prompt_tokens, self.new_tokens])
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_time - self.admit_time
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_time - self.admit_time
+
+
+class FCFSScheduler:
+    """First-come-first-served admission.  The head of the queue blocks —
+    a later-arriving short request never jumps an earlier long one, which
+    keeps admission order (and therefore slot assignment) deterministic."""
+
+    def __init__(self):
+        self._queue: deque[Request] = deque()
+        self._next_id = 0
+
+    def submit(self, req: Request) -> int:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request needs max_new_tokens >= 1, got {req.max_new_tokens} "
+                "(the engine always decodes at least one token per admission)"
+            )
+        if req.id < 0:
+            req.id = self._next_id
+        self._next_id = max(self._next_id, req.id) + 1
+        self._queue.append(req)
+        return req.id
+
+    def pop_ready(self, step: int) -> Optional[Request]:
+        """Head of the queue if it has arrived by engine step ``step``."""
+        if self._queue and self._queue[0].arrival_step <= step:
+            return self._queue.popleft()
+        return None
+
+    def has_pending(self) -> bool:
+        return bool(self._queue)
+
+    def __len__(self) -> int:
+        return len(self._queue)

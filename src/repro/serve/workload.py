@@ -1,0 +1,57 @@
+"""Deterministic synthetic serving workloads (staggered arrivals, mixed
+prompt lengths) built on the Zipf-Markov corpus from ``data/synthetic.py``.
+
+Shared by ``launch/serve.py --continuous``, ``examples/serve_continuous.py``
+and ``benchmarks/serve_bench.py`` so the three always replay the same
+requests for a given (arch, seed) — the greedy-identity check depends on it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, batch_at
+from repro.serve.scheduler import Request
+
+
+def _extras_for(cfg: ModelConfig) -> dict:
+    if cfg.family == "encdec":
+        return {"frames": np.zeros((cfg.encoder_seq, cfg.d_model), np.float32)}
+    if cfg.family == "vlm":
+        return {"patches": np.zeros((cfg.num_patches, cfg.d_model), np.float32)}
+    return {}
+
+
+def staggered_requests(
+    cfg: ModelConfig,
+    n_requests: int = 12,
+    base_len: int = 16,
+    max_new_tokens: int = 8,
+    stagger: int = 2,
+    seed: int = 7,
+    mixed_new: bool = True,
+) -> list[Request]:
+    """``n_requests`` prompts over 3 mixed lengths (base/2, base, 3*base/2),
+    arriving every ``stagger`` engine steps; max_new alternates between the
+    full budget and half of it when ``mixed_new`` (so the static baseline
+    pays for stragglers that continuous batching retires early)."""
+    lens = [max(4, base_len // 2), base_len, base_len + base_len // 2]
+    reqs = []
+    for i in range(n_requests):
+        plen = lens[i % len(lens)]
+        data = DataConfig(vocab=cfg.vocab, seq_len=plen, global_batch=1, seed=seed + i)
+        tokens = np.asarray(batch_at(data, 0)["tokens"][0], np.int32)
+        new = max(1, max_new_tokens if (not mixed_new or i % 2 == 0)
+                  else max(2, max_new_tokens // 2))
+        reqs.append(Request(
+            id=i,
+            tokens=tokens,
+            max_new_tokens=new,
+            arrival_step=i * stagger,
+            extras=_extras_for(cfg),
+        ))
+    return reqs
+
+
+def required_max_seq(requests) -> int:
+    return max(r.prompt_len + r.max_new_tokens for r in requests)

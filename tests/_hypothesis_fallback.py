@@ -1,0 +1,77 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The real library (pinned in requirements-dev.txt) is preferred — install it
+with ``pip install -r requirements-dev.txt``.  On bare containers this
+fallback keeps the property tests collecting AND running, as fixed-seed
+parameter sweeps over the same strategy ranges.  API coverage is exactly
+what tests/ uses: ``@settings(max_examples=..., deadline=...)``,
+``@given(**strategies)`` and ``st.integers / st.floats / st.sampled_from``.
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 10
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options):
+        seq = list(options)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+
+st = _Strategies()
+
+
+def given(**strategies):
+    """Run the test body over ``max_examples`` fixed-seed draws.  Failures
+    surface the drawn values through the normal assertion traceback."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            rng = random.Random(_SEED)
+            for _ in range(wrapper._max_examples):
+                draws = {k: s.example(rng) for k, s in strategies.items()}
+                fn(*args, **draws, **kwargs)
+
+        # NOT functools.wraps: pytest must see the (*args, **kwargs)
+        # signature, not the drawn parameters (they'd look like fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        wrapper._hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -26,6 +26,7 @@ def _run(arch: str):
     return r.stdout
 
 
+@pytest.mark.slow  # ~20s/arch: multi-host sim train + elastic restore
 @pytest.mark.parametrize("arch", ["internlm2-1.8b", "mixtral-8x22b"])
 def test_sharded_training_and_elastic_restore(arch):
     out = _run(arch)

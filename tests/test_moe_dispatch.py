@@ -10,8 +10,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare container: deterministic fixed-seed sweeps
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs.base import MoEConfig, ModelConfig
 from repro.models.layers import init_tree

@@ -1,0 +1,222 @@
+"""Continuous-batching serving subsystem tests.
+
+Pinned invariants:
+  1. slot pool: allocate/free/reuse bookkeeping, insert/extract roundtrip;
+  2. scheduler: strict FCFS admission (arrival gating, no queue jumping);
+  3. greedy continuous batching is token-identical to the static ``generate``
+     oracle — uniform workload, and mixed lengths with fewer slots than
+     requests (queueing + slot reuse);
+  4. the decode step compiles exactly once as requests join and leave;
+  5. the static engine's preallocated output buffer preserves the prompt
+     prefix and dtype;
+  6. stop-token requests finish early and free their slot.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduce_config
+from repro.data.synthetic import DataConfig, batch_at
+from repro.models.transformer import make_model
+from repro.serve.engine import (
+    ContinuousEngine,
+    ServeConfig,
+    generate,
+    static_reference,
+)
+from repro.serve.kv_cache import SlotKVPool
+from repro.serve.scheduler import FCFSScheduler, Request
+from repro.serve.workload import required_max_seq, staggered_requests
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = reduce_config(get_config("internlm2-1.8b"))
+    model = make_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompt(cfg, length, seed):
+    data = DataConfig(vocab=cfg.vocab, seq_len=length, global_batch=1, seed=seed)
+    return np.asarray(batch_at(data, 0)["tokens"][0], np.int32)
+
+
+# ----------------------------------------------------------------- pool ---
+def test_slot_alloc_free_reuse(dense):
+    _, model, _ = dense
+    pool = SlotKVPool(model, num_slots=3, max_seq=16)
+    slots = [pool.allocate() for _ in range(3)]
+    assert sorted(slots) == [0, 1, 2]
+    assert pool.num_free == 0
+    with pytest.raises(RuntimeError):
+        pool.allocate()
+    pool.free(1)
+    assert pool.num_free == 1
+    assert pool.allocate() == 1  # freed slot is recycled
+    with pytest.raises(ValueError):
+        pool.free(7)  # was never allocated
+    pool.free(0)
+    pool.free(1)
+    pool.free(2)
+    assert pool.num_free == 3 and pool.num_used == 0
+
+
+def test_slot_insert_extract_roundtrip(dense):
+    cfg, model, params = dense
+    pool = SlotKVPool(model, num_slots=3, max_seq=20)
+    batch = {"tokens": jnp.asarray(_prompt(cfg, 8, seed=1))[None]}
+    _, one = jax.jit(lambda p, b: model.prefill(p, b, 20))(params, batch)
+    slot = pool.allocate()
+    pool.insert(one, slot, position=8)
+    assert pool.positions[slot] == 8
+    back = pool.extract(slot)
+    chex_ok = jax.tree.map(
+        lambda a, b: np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32)),
+        one, back,
+    )
+    assert all(jax.tree.leaves(chex_ok))
+    with pytest.raises(ValueError):
+        pool.insert(one, slot, position=pool.max_seq + 1)
+    pool.free(slot)
+    assert pool.positions[slot] == 0
+
+
+# ------------------------------------------------------------ scheduler ---
+def test_scheduler_fcfs_admission_order():
+    sched = FCFSScheduler()
+    early = Request(tokens=np.zeros(4, np.int32), arrival_step=0)
+    late = Request(tokens=np.zeros(4, np.int32), arrival_step=5)
+    never_jumps = Request(tokens=np.zeros(4, np.int32), arrival_step=0)
+    ids = [sched.submit(r) for r in (early, late, never_jumps)]
+    assert ids == [0, 1, 2]
+
+    assert sched.pop_ready(0).id == 0
+    # head of queue hasn't arrived yet: the already-arrived request behind it
+    # must NOT jump the line (strict FCFS)
+    assert sched.pop_ready(0) is None
+    assert sched.pop_ready(4) is None
+    assert sched.pop_ready(5).id == 1
+    assert sched.pop_ready(5).id == 2
+    assert not sched.has_pending()
+
+
+# ------------------------------------------ continuous vs static oracle ---
+def test_uniform_workload_matches_static(dense):
+    cfg, model, params = dense
+    scfg = ServeConfig()
+    reqs = [
+        Request(id=i, tokens=_prompt(cfg, 10, seed=40 + i), max_new_tokens=5)
+        for i in range(4)
+    ]
+    engine = ContinuousEngine(model, params, num_slots=4, max_seq=15, cfg=scfg)
+    comps = engine.run(reqs)
+    ref = static_reference(model, params, reqs, scfg)
+    assert len(comps) == 4
+    for c in comps:
+        assert np.array_equal(c.tokens, ref[c.request_id])
+    m = engine.metrics()
+    assert m["decode_compilations"] in (1, None)
+    assert m["mean_slot_utilization"] > 0.9  # everyone decodes in lockstep
+
+
+def test_mixed_lengths_queueing_matches_static(dense):
+    cfg, model, params = dense
+    scfg = ServeConfig()
+    reqs = staggered_requests(cfg, n_requests=6, base_len=12,
+                              max_new_tokens=6, stagger=2, seed=9)
+    # 2 slots for 6 requests: forces queueing AND slot reuse mid-flight
+    engine = ContinuousEngine(model, params, num_slots=2,
+                              max_seq=required_max_seq(reqs), cfg=scfg)
+    comps = engine.run(reqs)
+    ref = static_reference(model, params, reqs, scfg)
+    assert len(comps) == 6
+    for c in comps:
+        assert np.array_equal(c.tokens, ref[c.request_id]), f"req {c.request_id}"
+        assert c.admit_step >= c.arrival_step
+    assert engine.metrics()["decode_compilations"] in (1, None)
+    # FCFS: admission order == request id order
+    admits = sorted(comps, key=lambda c: (c.admit_step, c.request_id))
+    assert [c.request_id for c in admits] == list(range(6))
+
+
+def test_ssm_family_continuous_matches_static():
+    cfg = reduce_config(get_config("xlstm-350m"))
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig()
+    reqs = [
+        Request(id=i, tokens=_prompt(cfg, L, seed=60 + i), max_new_tokens=4,
+                arrival_step=i)
+        for i, L in enumerate([8, 12, 8])
+    ]
+    engine = ContinuousEngine(model, params, num_slots=2, max_seq=16, cfg=scfg)
+    comps = engine.run(reqs)
+    ref = static_reference(model, params, reqs, scfg)
+    for c in comps:
+        assert np.array_equal(c.tokens, ref[c.request_id])
+    assert engine.metrics()["decode_compilations"] in (1, None)
+
+
+def test_stop_token_finishes_early_and_frees_slot(dense):
+    cfg, model, params = dense
+    # run once greedily to learn the 2nd generated token, then stop on it
+    probe = Request(id=0, tokens=_prompt(cfg, 8, seed=77), max_new_tokens=6)
+    engine = ContinuousEngine(model, params, num_slots=1, max_seq=14)
+    (done,) = engine.run([probe])
+    stop = int(done.new_tokens[1])
+
+    engine.reset()
+    req = Request(id=0, tokens=_prompt(cfg, 8, seed=77), max_new_tokens=6,
+                  stop_token=stop)
+    (c,) = engine.run([req])
+    assert c.finish_reason == "stop"
+    assert len(c.new_tokens) == 2
+    assert engine.pool.num_free == 1  # slot recycled on completion
+
+
+# ------------------------------------------------------------ static fix ---
+def test_static_generate_preserves_prompt_prefix(dense):
+    cfg, model, params = dense
+    batch = {"tokens": jnp.stack([jnp.asarray(_prompt(cfg, 9, seed=4))] * 2)}
+    out = generate(model, params, batch, ServeConfig(max_new_tokens=3))
+    assert out.shape == (2, 12)
+    assert out.dtype == jnp.int32
+    assert np.array_equal(np.asarray(out)[:, :9], np.asarray(batch["tokens"]))
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_engine_reset_replays_identically(dense, temperature):
+    # temperature>0 exercises the per-slot key streams: replay determinism
+    # requires reset() to restore the pool's slot assignment order too
+    cfg, model, params = dense
+    reqs = staggered_requests(cfg, n_requests=3, base_len=8,
+                              max_new_tokens=4, stagger=1, seed=31)
+    engine = ContinuousEngine(model, params, num_slots=2,
+                              max_seq=required_max_seq(reqs),
+                              cfg=ServeConfig(temperature=temperature, seed=5))
+    first = {c.request_id: c.tokens for c in engine.run(reqs)}
+    engine.reset()
+    second = {c.request_id: c.tokens for c in engine.run(reqs)}
+    assert first.keys() == second.keys()
+    for rid in first:
+        assert np.array_equal(first[rid], second[rid])
+
+
+def test_static_reference_truncates_at_stop_token(dense):
+    cfg, model, params = dense
+    probe = Request(id=0, tokens=_prompt(cfg, 8, seed=88), max_new_tokens=6)
+    engine = ContinuousEngine(model, params, num_slots=1, max_seq=14)
+    (done,) = engine.run([probe])
+    stop = int(done.new_tokens[1])
+
+    req = Request(id=0, tokens=_prompt(cfg, 8, seed=88), max_new_tokens=6,
+                  stop_token=stop)
+    ref = static_reference(model, params, [req], ServeConfig())
+    engine.reset()
+    (c,) = engine.run([req])
+    assert np.array_equal(c.tokens, ref[0])  # oracle honors the stop token
+    with pytest.raises(ValueError):
+        static_reference(model, params, [req], ServeConfig(temperature=0.5))

@@ -175,6 +175,7 @@ class TestFaultTolerance:
         ] + extra
         return subprocess.run(cmd, env=env, capture_output=True, text=True, timeout=600)
 
+    @pytest.mark.slow  # ~30s: full train-kill-restart subprocess cycle
     def test_checkpoint_restart_bitwise(self, tmp_path):
         # uninterrupted run
         r_full = self._run(tmp_path / "full", [])
