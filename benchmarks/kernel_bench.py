@@ -20,7 +20,8 @@ from repro.kernels.gn_layernorm.ref import gn_layernorm_ref
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    # one warmup evaluation; jax.block_until_ready handles tuples/pytrees
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))

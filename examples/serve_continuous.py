@@ -2,9 +2,11 @@
 
 A synthetic staggered-arrival workload (mixed prompt lengths, mixed decode
 budgets) streams through the FCFS scheduler + slot-paged KV pool + jit-once
-masked decode engine.  The demo prints the admission/completion timeline so
-you can watch requests join and leave the running batch without any
-recompilation, then cross-checks greedy outputs against the static engine.
+fused prefill/decode engine: admitted prompts drain chunk-by-chunk through
+idle lanes (P marks) while other slots decode (D marks).  The demo prints
+the admission/completion timeline so you can watch requests join and leave
+the running batch without any recompilation, then cross-checks greedy
+outputs against the static engine.
 
 Run:  PYTHONPATH=src python examples/serve_continuous.py [--arch internlm2-1.8b]
 """
@@ -47,7 +49,11 @@ def main():
         newly = engine.completions[done:]
         done = len(engine.completions)
         live = sum(s is not None for s in engine._slots)
-        marks = "".join("#" if s is not None else "." for s in engine._slots)
+        # P = prefilling a prompt chunk, D = decoding, . = idle slot
+        marks = "".join(
+            "." if s is None else ("P" if s.phase == "prefilling" else "D")
+            for s in engine._slots
+        )
         fin = " ".join(f"req{c.request_id}[{c.finish_reason}]" for c in newly)
         print(f"step {engine.step_count - 1:3d}  slots [{marks}] "
               f"active={live}" + (f"  finished: {fin}" if fin else ""))
@@ -57,7 +63,8 @@ def main():
     print(f"\nserved {m['completions']} requests, {m['generated_tokens']} tokens "
           f"in {dt:.2f}s ({m['generated_tokens']/dt:.1f} tok/s)")
     print(f"slot utilization {m['mean_slot_utilization']*100:.0f}%  "
-          f"decode compilations {m['decode_compilations']} (jit-once)")
+          f"fused-step compilations {m['fused_step_compilations']} (jit-once), "
+          f"per-length prefill compilations {m['prefill_compilations']}")
     lat = [c.latency_s for c in engine.completions]
     print(f"latency p50 {np.median(lat)*1e3:.0f}ms  max {max(lat)*1e3:.0f}ms")
 

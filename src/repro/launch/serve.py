@@ -8,9 +8,11 @@ which is exactly the quantity guaranteed normalization protects).
 Two modes:
   * static (default): the seed engine — uniform-length prompt batches,
     everyone decodes to --new-tokens.  Kept as the correctness oracle.
-  * --continuous: FCFS continuous batching over a slot-paged KV pool with a
-    single jitted masked decode step (see serve/engine.ContinuousEngine).
-    Greedy outputs are verified token-identical to the static path.
+  * --continuous: FCFS continuous batching over a slot-paged KV pool with
+    chunked prefill fused into a single jitted per-tick step — prompts are
+    bucketed to the chunk grid and stream through idle lanes while other
+    slots decode (see serve/engine.ContinuousEngine).  Greedy outputs are
+    verified token-identical to the static path.
 
 Usage (CPU smoke scale):
   python -m repro.launch.serve --arch internlm2-1.8b --smoke --batches 3
@@ -70,7 +72,7 @@ def _serve_continuous(model, cfg, params, args, scfg):
     )
     max_seq = required_max_seq(reqs)
     engine = ContinuousEngine(model, params, num_slots=args.num_slots,
-                              max_seq=max_seq, cfg=scfg)
+                              max_seq=max_seq, cfg=scfg, chunk=args.chunk)
     t0 = time.time()
     comps = engine.run(reqs)
     dt = time.time() - t0
@@ -79,16 +81,36 @@ def _serve_continuous(model, cfg, params, args, scfg):
     print(f"continuous: {len(comps)} requests, {gen_tok} tokens in {dt:.2f}s "
           f"({gen_tok/dt:.1f} tok/s)  slots={args.num_slots} "
           f"util={m['mean_slot_utilization']:.2f}")
-    print(f"decode compiled {m['decode_compilations']}x "
-          f"(prefill: {m['prefill_compilations']} prompt lengths)")
+    print(f"fused step compiled {m['fused_step_compilations']}x, decode "
+          f"{m['decode_compilations']}x, per-prompt-length prefill "
+          f"{m['prefill_compilations']}x  (chunk={m['chunk']}, intake "
+          f"padding {m['intake_padding']} tok)")
+
+    # per-tick slot phase occupancy: the fusion benefit made visible —
+    # prefill chunks ride lanes that would otherwise idle while decoding.
+    print("tick phases (P=prefill lanes, D=decode lanes, .=idle):")
+    for chunk_rows in range(0, len(engine.phase_log), 20):
+        rows = engine.phase_log[chunk_rows : chunk_rows + 20]
+        lanes = " ".join(
+            f"{'P'*p}{'D'*d}{'.'*(engine.num_slots-p-d)}" for p, d in rows
+        )
+        print(f"  tick {chunk_rows:3d}+ [{lanes}]")
+    pf = m["prefill_lane_fraction"]
+    print(f"  {m['fused_ticks']}/{m['decode_steps']} ticks carried prefill "
+          f"chunks ({pf*100:.0f}% of busy lanes were prefill)")
     for c in sorted(comps, key=lambda c: c.request_id):
         print(f"  req {c.request_id}: prompt {len(c.prompt_tokens)} "
               f"+{len(c.new_tokens)} [{c.finish_reason}]  "
               f"arrive@{c.arrival_step} admit@{c.admit_step} "
               f"finish@{c.finish_step}  latency {c.latency_s*1e3:.0f}ms")
 
-    # None = this jax version doesn't expose the jit cache-size probe
-    assert m["decode_compilations"] in (1, None), "decode step recompiled!"
+    # None = this jax version doesn't expose the jit cache-size probe.
+    # Every prompt streams through the fused step, so it must have compiled
+    # exactly once; the decode fast path may be unused (0) when every tick
+    # carried a prefill lane.
+    assert m["fused_step_compilations"] in (1, None), "fused step recompiled!"
+    assert m["decode_compilations"] in (0, 1, None), "decode step recompiled!"
+    assert m["prefill_compilations"] == 0, "per-prompt-length prefill is back?!"
     if scfg.temperature == 0:
         ref = static_reference(model, params, reqs, scfg)
         same = all(np.array_equal(c.tokens, ref[c.request_id]) for c in comps)
@@ -114,6 +136,8 @@ def main(argv=None):
                     help="continuous: KV pool capacity (concurrent sequences)")
     ap.add_argument("--stagger", type=int, default=2,
                     help="continuous: arrival gap between requests (steps)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="continuous: prefill chunk size (fused-step lanes)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

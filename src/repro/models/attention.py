@@ -167,6 +167,71 @@ def attn_prefill(cfg: ModelConfig, p: dict, x, positions):
     return out, {"k": k, "v": v}
 
 
+def attn_decode_chunk(cfg: ModelConfig, p: dict, cache: dict, x, pos, n_valid):
+    """Chunked append-decode: C tokens enter the cache at absolute positions
+    [pos, pos+n_valid); lanes >= ``n_valid`` are don't-care (their cache
+    writes are dropped via an out-of-bounds scatter index, their outputs are
+    garbage the caller ignores).  x: (B,C,D); pos/n_valid: traced scalars.
+
+    This is the chunked-prefill workhorse of the fused serving step: row i
+    attends over cache[0 .. pos+i] exactly like ``attn_decode_step`` at
+    position pos+i, so streaming a prompt through it chunk-by-chunk writes
+    the same cache and logits the monolithic ``attn_prefill`` produces.
+    Sliding-window configs keep the ring-buffer layout (writes land at
+    (pos+i) % slots) and need chunk <= window.
+    """
+    dt = x.dtype
+    b, c_len = x.shape[:2]
+    offs = jnp.arange(c_len)
+    rows = pos + offs  # absolute positions, one per chunk lane
+    posv = jnp.broadcast_to(rows[None], (b, c_len))
+    q = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)), cfg.n_heads, cfg.head_dim)
+    k_new = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wk"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wv"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+
+    slots = cache["k"].shape[1]
+    win = cfg.sliding_window or 0
+    widx = (rows % slots) if win else rows
+    widx = jnp.where(offs < n_valid, widx, slots)  # invalid lanes -> dropped
+    k = cache["k"].at[:, widx].set(k_new.astype(cache["k"].dtype), mode="drop")
+    v = cache["v"].at[:, widx].set(v_new.astype(cache["v"].dtype), mode="drop")
+
+    idx = jnp.arange(slots)
+    if win:
+        # A chunk of C writes evicts C ring entries the chunk's *earliest*
+        # queries still need, so attend the pre-write ring and the chunk's
+        # own k/v side by side instead of the post-write ring.  Pre-write
+        # entry j holds absolute position (pos-1) - age_j; it is in row i's
+        # window iff it is >= pos+i-win+1 (and exists, >= 0).
+        age_old = (((pos - 1) % slots) - idx) % slots  # 0 = newest pre-write
+        abs_old = (pos - 1) - age_old  # (slots,)
+        valid_old = (abs_old[None, :] >= rows[:, None] - (win - 1)) & (
+            abs_old[None, :] >= 0
+        )
+        valid_new = offs[None, :] <= offs[:, None]  # in-chunk causal (C <= win)
+        valid = jnp.concatenate([valid_old, valid_new], axis=1)  # (C, slots+C)
+        k_at = jnp.concatenate([cache["k"], k_new.astype(cache["k"].dtype)], axis=1)
+        v_at = jnp.concatenate([cache["v"], v_new.astype(cache["v"].dtype)], axis=1)
+    else:
+        valid = idx[None, :] <= rows[:, None]  # (C, slots)
+        k_at, v_at = k, v
+    mask = valid[None, None, None]  # broadcast over (b, kv, group)
+
+    kv = cfg.n_kv_heads
+    group = cfg.n_heads // kv
+    qg = q.reshape(b, c_len, kv, group, cfg.head_dim)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_at) * (cfg.head_dim**-0.5)
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    from repro.core import get_softmax
+
+    pmat = get_softmax(cfg.softmax_impl)(scores).astype(v_at.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", pmat, v_at).reshape(b, c_len, cfg.q_features)
+    out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+    return out, {"k": k, "v": v}
+
+
 def attn_decode_step(cfg: ModelConfig, p: dict, cache: dict, x, pos):
     """One-token decode.  x: (B,1,D); pos: scalar int32 (current position).
 

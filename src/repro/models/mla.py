@@ -151,6 +151,29 @@ def mla_prefill(cfg: ModelConfig, p: dict, x, positions):
     return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 
+def mla_decode_chunk(cfg: ModelConfig, p: dict, cache: dict, x, pos, n_valid):
+    """Chunked append-decode over the latent cache (see attention.py
+    ``attn_decode_chunk`` for the lane/masking contract).  x: (B,C,D);
+    pos/n_valid: traced scalars.  Lanes >= n_valid drop their cache writes
+    (out-of-bounds scatter) and produce don't-care outputs."""
+    b, c_len = x.shape[:2]
+    offs = jnp.arange(c_len)
+    rows = pos + offs
+    posv = jnp.broadcast_to(rows[None], (b, c_len))
+    q_nope, q_rope, c_new, kr_new = _project(cfg, p, x, posv)
+    t = cache["c_kv"].shape[1]
+    widx = jnp.where(offs < n_valid, rows, t)  # invalid lanes -> dropped
+    c_kv = cache["c_kv"].at[:, widx].set(
+        c_new.astype(cache["c_kv"].dtype), mode="drop"
+    )
+    k_rope = cache["k_rope"].at[:, widx].set(
+        kr_new.astype(cache["k_rope"].dtype), mode="drop"
+    )
+    mask = (jnp.arange(t)[None, :] <= rows[:, None])[None, None]  # (1,1,C,t)
+    out = _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
 def mla_decode_step(cfg: ModelConfig, p: dict, cache: dict, x, pos):
     b = x.shape[0]
     posv = jnp.full((b, 1), pos, jnp.int32)

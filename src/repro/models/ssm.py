@@ -36,16 +36,35 @@ def mlstm_specs(cfg: ModelConfig) -> dict:
     }
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+# On *exact* (serving) calls, below this length the K-tap shift-add form is
+# used instead of the fused grouped conv.  The two differ in accumulation
+# order (the conv accumulates in f32, the shift-add chain rounds per tap in
+# the activation dtype), so every serving path — monolithic prefill, chunked
+# prefill, single-token decode — must land on the same side of the threshold
+# to keep greedy continuous batching bit-identical to the static oracle.
+# Serve prompts and chunks sit well below 256; training and long-prefill
+# shapes keep the fused conv and its memory win (perf iteration C2).
+_CONV_FUSED_MIN = 256
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state=None, n_valid=None,
+                 exact=False):
     """Depthwise causal conv along time.  x: (B,S,C), w: (K,C).
 
     With ``state`` (B,K-1,C) provided, uses it as left context (decode);
-    returns (out, new_state).
+    returns (out, new_state).  With ``n_valid`` (traced scalar), only the
+    first n_valid time steps are real: the returned state is the K-1 inputs
+    ending at step n_valid-1, so a partially-valid chunk hands the next
+    chunk exactly the context a contiguous pass would have.
 
     Long sequences use one grouped ``lax.conv_general_dilated`` — perf
     iteration C2 (§Perf): the unrolled K-tap shift-add materializes ~2K
     (B,S,C) tensors per pass; the fused conv touches x and the output once.
-    Decode (S < K) keeps the shift-add form, which XLA fuses trivially.
+    ``exact`` (serving paths: decode/chunk via their carries, monolithic
+    prefill via the block kwarg) raises the fused-conv floor to
+    _CONV_FUSED_MIN so every serve-sized call uses the shift-add form,
+    which is per-position bit-identical across S.  Training keeps the
+    plain S >= K rule.
     """
     k = w.shape[0]
     if state is None:
@@ -53,7 +72,7 @@ def _causal_conv(x: jax.Array, w: jax.Array, state=None):
     else:
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
-    if x.shape[1] >= k:
+    if x.shape[1] >= (max(k, _CONV_FUSED_MIN) if exact else k):
         c = x.shape[2]
         out = jax.lax.conv_general_dilated(
             xp,
@@ -67,7 +86,15 @@ def _causal_conv(x: jax.Array, w: jax.Array, state=None):
         out = jnp.zeros_like(x)
         for i in range(k):
             out = out + xp[:, i : i + x.shape[1]] * w[i][None, None, :]
-    new_state = xp[:, -(k - 1) :] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    if k <= 1:
+        new_state = jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    elif n_valid is None:
+        new_state = xp[:, -(k - 1) :]
+    else:
+        # last K-1 inputs of the *valid* prefix: xp[:, n_valid : n_valid+K-1]
+        new_state = jax.lax.dynamic_slice(
+            xp, (0, n_valid, 0), (xp.shape[0], k - 1, xp.shape[2])
+        )
     return out, new_state
 
 
@@ -169,8 +196,16 @@ def _mlstm_chunked(q, k, v, i_raw, f_raw, carry, chunk: int):
     return h, state
 
 
-def mlstm_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
-    """x: (B,S,D) -> (y, carry).  carry=None initializes zero state."""
+def mlstm_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None, n_valid=None,
+                exact=False):
+    """x: (B,S,D) -> (y, carry).  carry=None initializes zero state.
+
+    ``n_valid`` (traced scalar, chunked-prefill lanes) freezes the carry
+    after the first n_valid time steps: steps >= n_valid produce don't-care
+    outputs and leave (conv state, C, n, m) exactly where a contiguous pass
+    over the valid prefix would.  ``exact`` marks a serving call (monolithic
+    prefill) so the conv path matches decode/chunk accumulation order;
+    decode/chunk calls are exact implicitly via their carry/n_valid."""
     dt = x.dtype
     s_cfg = cfg.ssm
     b, s, d = x.shape
@@ -187,7 +222,8 @@ def mlstm_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
         m0 = jnp.full((b, h_heads), -1e30, jnp.float32)
     else:
         conv_state, C0, n0, m0 = carry
-    uc, conv_state = _causal_conv(u, p["conv_w"].astype(dt), conv_state)
+    exact = exact or carry is not None or n_valid is not None
+    uc, conv_state = _causal_conv(u, p["conv_w"].astype(dt), conv_state, n_valid, exact)
     uc = jax.nn.silu(uc)
 
     uch = uc.reshape(b, s, h_heads, dh)
@@ -200,13 +236,19 @@ def mlstm_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
     f_raw = jax.nn.log_sigmoid(gates[..., h_heads:].astype(jnp.float32))
 
     def step(carry, inp):
-        qt, kt, vt, it, ft = inp
-        return _mlstm_heads(
+        qt, kt, vt, it, ft, t = inp
+        new_carry, h = _mlstm_heads(
             cfg, qt.astype(jnp.float32), kt.astype(jnp.float32), vt.astype(jnp.float32), it, ft, carry
         )
+        if n_valid is not None:  # freeze the state on don't-care lanes
+            keep = t < n_valid
+            new_carry = jax.tree.map(
+                lambda nw, old: jnp.where(keep, nw, old), new_carry, carry
+            )
+        return new_carry, h
 
     chunk = s_cfg.chunk
-    if chunk and s > chunk and s % chunk == 0:
+    if chunk and s > chunk and s % chunk == 0 and n_valid is None:
         hs_bshd, (C, n, m) = _mlstm_chunked(
             q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
             i_raw, f_raw, (C0, n0, m0), chunk,
@@ -219,6 +261,7 @@ def mlstm_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
             v.transpose(1, 0, 2, 3),
             i_raw.transpose(1, 0, 2),
             f_raw.transpose(1, 0, 2),
+            jnp.arange(s),
         )
         (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
         h = hs.transpose(1, 0, 2, 3).reshape(b, s, d_in).astype(dt)  # (B,S,d_in)
@@ -243,27 +286,33 @@ def mlstm_cache_shape(cfg: ModelConfig, batch: int) -> tuple:
 
 
 # ============================================================== Mamba2 ======
-def _ssd_recurrent(xs, B, C, dt_v, decay, h0):
+def _ssd_recurrent(xs, B, C, dt_v, decay, h0, n_valid=None):
     """SSD in per-token recurrent form (decode / odd lengths).
 
     xs: (B,S,H,dh); B/C: (B,S,N); dt_v/decay: (B,S,H); h0: (B,H,dh,N).
-    Returns (y (B,S,H,dh) float32, h_final).
+    Returns (y (B,S,H,dh) float32, h_final).  With ``n_valid`` (traced
+    scalar) the state freezes after the first n_valid steps (chunked-prefill
+    don't-care lanes).
     """
 
     def step(h, inp):
-        xt, bt, ct, dct, dtt = inp  # (B,H,dh) (B,N) (B,N) (B,H) (B,H)
-        h = h * dct[..., None, None] + (
+        xt, bt, ct, dct, dtt, t = inp  # (B,H,dh) (B,N) (B,N) (B,H) (B,H) ()
+        h_new = h * dct[..., None, None] + (
             dtt[..., None, None] * xt[..., None] * bt[:, None, None, :]
         )
-        yt = jnp.einsum("bhdn,bn->bhd", h, ct)
-        return h, yt
+        yt = jnp.einsum("bhdn,bn->bhd", h_new, ct)
+        if n_valid is not None:
+            h_new = jnp.where(t < n_valid, h_new, h)
+        return h_new, yt
 
+    s = xs.shape[1]
     seq = (
         xs.transpose(1, 0, 2, 3).astype(jnp.float32),
         B.transpose(1, 0, 2).astype(jnp.float32),
         C.transpose(1, 0, 2).astype(jnp.float32),
         decay.transpose(1, 0, 2),
         dt_v.transpose(1, 0, 2),
+        jnp.arange(s),
     )
     h_final, ys = jax.lax.scan(step, h0, seq)
     return ys.transpose(1, 0, 2, 3), h_final
@@ -353,8 +402,13 @@ def mamba2_specs(cfg: ModelConfig) -> dict:
     }
 
 
-def mamba2_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
-    """SSD in recurrent form.  x: (B,S,D) -> (y, carry)."""
+def mamba2_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None, n_valid=None,
+                 exact=False):
+    """SSD in recurrent form.  x: (B,S,D) -> (y, carry).
+
+    ``n_valid`` (traced scalar, chunked-prefill lanes) freezes (conv state,
+    h) after the first n_valid time steps; ``exact`` marks a serving call —
+    see ``mlstm_block``."""
     dt_ = x.dtype
     s_cfg = cfg.ssm
     b, s, d = x.shape
@@ -373,7 +427,8 @@ def mamba2_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
         h0 = jnp.zeros((b, nheads, dh, nst), jnp.float32)
     else:
         conv_state, h0 = carry
-    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(dt_), conv_state)
+    exact = exact or carry is not None or n_valid is not None
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(dt_), conv_state, n_valid, exact)
     xbc = jax.nn.silu(xbc)
     xs = xbc[..., :d_in].reshape(b, s, nheads, dh)
     B = xbc[..., d_in : d_in + nst]  # (B,S,N) shared across heads
@@ -384,10 +439,10 @@ def mamba2_block(cfg: ModelConfig, p: dict, x: jax.Array, carry=None):
     decay = jnp.exp(dt_v * A)  # (B,S,H)
 
     chunk = s_cfg.chunk
-    if chunk and s > chunk and s % chunk == 0:
+    if chunk and s > chunk and s % chunk == 0 and n_valid is None:
         y, h_final = _ssd_chunked(xs, B, C, dt_v, decay, h0, chunk)
     else:
-        y, h_final = _ssd_recurrent(xs, B, C, dt_v, decay, h0)
+        y, h_final = _ssd_recurrent(xs, B, C, dt_v, decay, h0, n_valid)
     y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(b, s, d_in).astype(dt_)
     y = gn_rmsnorm(y * jax.nn.silu(z), p["norm"])

@@ -66,6 +66,14 @@ def _lm_head(cfg, params, x):
     return shard(logits, "batch", "seq", "vocab")
 
 
+def _chunk_head(cfg, params, x, n_valid, last_only):
+    """LM head for a chunk step: project all C rows, or (last_only) just the
+    next-token row n_valid-1 — per-row matmuls make the gather bit-exact."""
+    if last_only:
+        x = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    return _lm_head(cfg, params, x)
+
+
 class Model:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
@@ -434,6 +442,198 @@ class Model:
             cache, tokens, positions
         )
 
+    # ------------------------------------------------- fused chunk step ---
+    def fresh_request_cache(self, max_seq: int):
+        """Batch-1 cache tree in the family's *initial* (pre-prompt) state —
+        the chunked-prefill entry point.  Zeros everywhere except the mLSTM
+        stabilizer m, whose empty value is -1e30 (``mlstm_block``'s
+        carry=None init); a zero m would corrupt the first chunk's gating."""
+        cache = self.init_cache(1, max_seq)
+        if self.cfg.family == "ssm" and self.cfg.ssm.kind == "mlstm":
+            cache["layers"][3] = jnp.full_like(cache["layers"][3], -1e30)
+        return cache
+
+    def encode_cross_kv(self, params, frames):
+        """encdec admission path: run the encoder once and project the
+        per-layer cross k/v the decoder's chunked prefill will attend to.
+        frames: (B, M_frames, D) -> {'k','v'}: (L, B, M, KV, dh), exactly the
+        ``cache['cross']`` layout ``prefill`` produces."""
+
+        memory = self._encode(params, frames)
+
+        def body(_, lp):
+            k, v = _project_cross_kv(self.cfg, lp["xattn"], memory)
+            return None, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(body, None, params["layers"])
+        return {"k": ks, "v": vs}
+
+    def prefill_chunk(self, params, cache, tokens, pos, n_valid, last_only=False):
+        """Masked, position-offset multi-token step: process ``tokens``
+        (B, C) at absolute positions [pos, pos+n_valid), appending into the
+        decode cache at the traced write offset ``pos``.  Lanes >= n_valid
+        are don't-care: their cache writes are dropped and recurrent carries
+        frozen (see attn_decode_chunk / mlstm_block / mamba2_block).
+
+        With n_valid=1 this is a decode step whose extra lanes are padding;
+        with full chunks it streams a prompt into the cache chunk-by-chunk.
+        At serve scales (prompt < the conv-fusion / chunked-SSD / chunked-
+        attention thresholds) the result is bit-identical to the monolithic
+        ``prefill`` followed by ``decode_step``s, which is what keeps greedy
+        continuous batching token-identical to the static oracle.
+
+        Returns (logits, new cache).  With ``last_only=False`` logits is
+        (B, C, V) and row n_valid-1 is the next-token distribution after the
+        chunk; with ``last_only=True`` only that row is projected through
+        the LM head — (B, 1, V) — which skips (C-1)/C of the vocab matmul
+        on serving ticks (the row gather is bit-identical to slicing the
+        full projection, matmul rows being independent).
+        """
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed"]["tok"].astype(dt)[tokens]  # (B, C, D)
+        x = shard(x, "batch", None, "embed_act")
+
+        if cfg.family == "hybrid":
+            return self._hybrid_chunk(params, cache, x, pos, n_valid, last_only)
+        if cfg.family == "vlm":
+            return self._vlm_chunk(params, cache, x, pos, n_valid, last_only)
+        if cfg.family == "encdec":
+            return self._encdec_chunk(params, cache, x, pos, n_valid, last_only)
+
+        def body(x, scanned):
+            lp, lcache = scanned
+            h = apply_norm(cfg, lp["ln1"], x)
+            if cfg.mla is not None:
+                y, nc = mla_mod.mla_decode_chunk(cfg, lp["mixer"], lcache, h, pos, n_valid)
+            elif cfg.family == "ssm":
+                blk = ssm_mod.mlstm_block if cfg.ssm.kind == "mlstm" else ssm_mod.mamba2_block
+                carry = tuple(lcache[i] for i in sorted(lcache))
+                y, ncarry = blk(cfg, lp["mixer"], h, carry, n_valid=n_valid)
+                nc = {i: c for i, c in enumerate(ncarry)}
+            else:
+                y, nc = attn.attn_decode_chunk(cfg, lp["mixer"], lcache, h, pos, n_valid)
+            x = x + y
+            if "mlp" in lp:
+                h2 = apply_norm(cfg, lp["ln2"], x)
+                y = (
+                    moe_mod.apply_moe(cfg, lp["mlp"], h2)[0]
+                    if cfg.moe
+                    else apply_mlp(cfg, lp["mlp"], h2)
+                )
+                x = x + y
+            return x, nc
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        logits = _chunk_head(cfg, params, x, n_valid, last_only)
+        return logits, {**cache, "layers": new_layers}
+
+    def _hybrid_chunk(self, params, cache, x, pos, n_valid, last_only=False):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.attn_every
+        layers = self._group_tree(params["layers"], g)
+        lcache = self._group_tree(cache["layers"], g)
+        shared = params["shared_attn"]
+
+        def group_body(x, scanned):
+            gp, gc, skv = scanned
+            h = apply_norm(cfg, shared["ln1"], x)
+            y, new_skv = attn.attn_decode_chunk(cfg, shared["attn"], skv, h, pos, n_valid)
+            x = x + y
+            h = apply_norm(cfg, shared["ln2"], x)
+            x = x + apply_mlp(cfg, shared["mlp"], h)
+
+            def inner(x2, s2):
+                lp, lc = s2
+                h2 = apply_norm(cfg, lp["ln1"], x2)
+                carry = tuple(lc[i] for i in sorted(lc))
+                y2, ncarry = ssm_mod.mamba2_block(cfg, lp["mixer"], h2, carry, n_valid=n_valid)
+                return x2 + y2, {i: c for i, c in enumerate(ncarry)}
+
+            x, ncarries = jax.lax.scan(inner, x, (gp, gc))
+            return x, (ncarries, new_skv)
+
+        x, (ncar, nskv) = jax.lax.scan(group_body, x, (layers, lcache, cache["shared"]))
+        L = cfg.n_layers
+        ncar = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), ncar)
+        logits = _chunk_head(cfg, params, x, n_valid, last_only)
+        return logits, {"layers": ncar, "shared": nskv}
+
+    def _vlm_chunk(self, params, cache, x, pos, n_valid, last_only=False):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.cross_attn_every
+        layers = self._group_tree(params["layers"], g)
+        lcache = self._group_tree(cache["layers"], g)
+        patches = cache["patches"]
+
+        def group_body(x, scanned):
+            gp, xp, gc = scanned
+            x = self._xattn_block(xp, x, patches)
+
+            def inner(x2, s2):
+                lp, lc = s2
+                h = apply_norm(cfg, lp["ln1"], x2)
+                y, nc = attn.attn_decode_chunk(cfg, lp["mixer"], lc, h, pos, n_valid)
+                x2 = x2 + y
+                h2 = apply_norm(cfg, lp["ln2"], x2)
+                x2 = x2 + apply_mlp(cfg, lp["mlp"], h2)
+                return x2, nc
+
+            x, ngc = jax.lax.scan(inner, x, (gp, gc))
+            return x, ngc
+
+        x, nlc = jax.lax.scan(group_body, x, (layers, params["xattn_layers"], lcache))
+        nlc = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nlc)
+        logits = _chunk_head(cfg, params, x, n_valid, last_only)
+        return logits, {**cache, "layers": nlc}
+
+    def _encdec_chunk(self, params, cache, x, pos, n_valid, last_only=False):
+        cfg = self.cfg
+
+        def body(x, scanned):
+            lp, lcache, xk, xv = scanned
+            h = apply_norm(cfg, lp["ln1"], x)
+            y, nc = attn.attn_decode_chunk(cfg, lp["mixer"], lcache, h, pos, n_valid)
+            x = x + y
+            hx = apply_norm(cfg, lp["ln_x"], x)
+            x = x + _cross_attend_cached(cfg, lp["xattn"], hx, xk, xv)
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + apply_mlp(cfg, lp["mlp"], h2)
+            return x, nc
+
+        x, new_layers = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"], cache["cross"]["k"], cache["cross"]["v"])
+        )
+        logits = _chunk_head(cfg, params, x, n_valid, last_only)
+        return logits, {**cache, "layers": new_layers}
+
+    def fused_step_slots(self, params, cache, tokens, positions, n_valid):
+        """Per-slot fused prefill/decode for continuous batching: every slot
+        processes its own C-token chunk at its own write offset.  tokens:
+        (N, C) int32; positions/n_valid: (N,) int32 (all traced -> a single
+        compilation regardless of the prompt-length mix).  Returns (logits
+        (N, 1, V) — each slot's next-token row n_valid-1, the only one a
+        serving tick consumes — and the new cache).  Decode slots pass their
+        one sampled token in lane 0 with n_valid=1; prefill slots pass the
+        next prompt chunk.
+
+        Like ``decode_step_slots``, a vmap of the single-sequence step over
+        the cache's batch axes, so all seven cache families reuse their
+        chunk path unchanged.
+        """
+        axes = self.cache_batch_axes()
+
+        def one(c, t, pos, nv):
+            c = jax.tree.map(jnp.expand_dims, c, axes)
+            logits, nc = self.prefill_chunk(params, c, t[None], pos, nv,
+                                            last_only=True)
+            nc = jax.tree.map(jnp.squeeze, nc, axes)
+            return logits[0], nc
+
+        return jax.vmap(one, in_axes=(axes, 0, 0, 0), out_axes=(0, axes))(
+            cache, tokens, positions, n_valid
+        )
+
     # ----------------------------------------------------------- prefill ---
     def prefill(self, params, batch: dict, max_seq: int | None = None):
         """Prompt pass.  Returns (full-seq logits, decode-ready cache)."""
@@ -478,7 +678,7 @@ class Model:
                 }
             elif cfg.family == "ssm":
                 blk = ssm_mod.mlstm_block if cfg.ssm.kind == "mlstm" else ssm_mod.mamba2_block
-                y, carry = blk(cfg, lp["mixer"], h)
+                y, carry = blk(cfg, lp["mixer"], h, exact=True)
                 kv = {i: c for i, c in enumerate(carry)}
             else:
                 y, kv = attn.attn_prefill(cfg, lp["mixer"], h, positions)
@@ -527,7 +727,7 @@ class Model:
 
             def inner(x2, lp):
                 h2 = apply_norm(cfg, lp["ln1"], x2)
-                y2, carry = ssm_mod.mamba2_block(cfg, lp["mixer"], h2)
+                y2, carry = ssm_mod.mamba2_block(cfg, lp["mixer"], h2, exact=True)
                 return x2 + y2, {i: c for i, c in enumerate(carry)}
 
             x, carries = jax.lax.scan(inner, x, gp)

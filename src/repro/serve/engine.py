@@ -9,15 +9,19 @@ Two paths share the per-family caches from ``models/transformer.py``:
   (O(n) — the old per-token ``jnp.concatenate`` re-copied the whole buffer
   every step).
 
-* ``ContinuousEngine`` — continuous batching over a ``SlotKVPool``.  The
-  decode step is jitted ONCE over the fixed slot set: per-slot positions,
-  per-slot temperatures and an active mask are traced arrays, so requests
-  joining and leaving never trigger recompilation.  Prefill compiles per
-  distinct prompt length (shape-polymorphic prompts are outside jit's
-  vocabulary); the decode loop is where continuous batching lives.
+* ``ContinuousEngine`` — continuous batching over a ``SlotKVPool`` with
+  chunked prefill fused into the per-tick step.  Admission pages an empty
+  slot in; the fused step (jitted ONCE over the fixed (num_slots, chunk)
+  token budget) then drains the prompt chunk-by-chunk through otherwise-
+  idle lanes while other slots keep decoding.  Per-slot positions, valid
+  counts, phases, temperatures and the active mask are all traced arrays,
+  so requests joining/leaving/prefilling never trigger recompilation —
+  and there is no per-prompt-length prefill jit at all (prompts are
+  bucketed to the chunk grid at intake, see serve/scheduler.pad_to_grid).
 
-Layering: scheduler (admission) -> kv_cache (slot residency) -> engine
-(this file: sampling, stop conditions, metrics).
+Layering: scheduler (admission + chunk-grid bucketing) -> kv_cache (slot
+residency, offset-ranged positions) -> engine (this file: the fused step,
+sampling, phase state machine, stop conditions, metrics).
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ import numpy as np
 
 from repro.models.transformer import Model
 from repro.serve.kv_cache import SlotKVPool
-from repro.serve.scheduler import Completion, FCFSScheduler, Request
+from repro.serve.scheduler import Completion, FCFSScheduler, Request, pad_to_grid
 
 
 @dataclasses.dataclass
@@ -132,33 +136,71 @@ class _SlotState:
     admit_step: int
     admit_time: float
     generated: list
+    phase: str = "decoding"       # 'prefilling' | 'decoding'
+    padded: Optional[np.ndarray] = None  # prompt padded to the chunk grid
+    written: int = 0              # prompt tokens committed to the cache
     first_token_step: int = -1
     first_token_time: float = 0.0
 
 
 class ContinuousEngine:
-    """Continuous-batching engine over a fixed slot set.
+    """Continuous-batching engine over a fixed slot set, with chunked
+    prefill fused into the decode step.
 
-    Per engine tick: admit waiting requests into free slots (prefill + slot
-    page-in), then run ONE masked decode over all ``num_slots`` slots —
-    inactive slots compute dont-care lanes that are never committed (their
-    cache is fully overwritten at the next admission).  Greedy outputs are
-    token-identical to the static ``generate`` path.
+    Admission pages a *fresh* (empty) cache into a free slot — no blocking
+    prefill call, no per-prompt-length compilation.  Each engine tick then
+    runs ONE jitted step over a fixed (num_slots, chunk) token budget:
+    every active slot contributes either its next decode token (phase
+    'decoding', one valid lane) or the next chunk of its remaining prompt
+    (phase 'prefilling', up to ``chunk`` valid lanes), so prompts stream
+    through otherwise-idle lanes instead of stalling the batch.  Per-slot
+    positions, valid counts, phases, temperatures and the active mask are
+    all traced arrays -> requests joining/leaving/prefilling never trigger
+    recompilation.  Ticks where every live slot is decoding take the
+    cheaper (num_slots, 1) decode step (also compiled once).
+
+    Greedy outputs are token-identical to the static ``generate`` path for
+    every family whose serve shapes stay below the monolithic-path
+    thresholds (conv fusion, chunked SSD/mLSTM, chunked attention) — see
+    ``Model.prefill_chunk``.  MoE chunked prefill is the one exception:
+    GShard capacity dropping depends on the dispatch group, so a chunked
+    pass can route borderline tokens differently than a monolithic one.
     """
 
     def __init__(self, model: Model, params, num_slots: int, max_seq: int,
                  cfg: ServeConfig = ServeConfig(),
-                 scheduler: Optional[FCFSScheduler] = None):
+                 scheduler: Optional[FCFSScheduler] = None,
+                 chunk: int = 8):
         self.model, self.params, self.cfg = model, params, cfg
         self.num_slots, self.max_seq = int(num_slots), int(max_seq)
+        self.chunk = int(chunk)
+        win = model.cfg.sliding_window or 0
+        limit = min(self.max_seq, win) if win else self.max_seq
+        if not 1 <= self.chunk <= limit:
+            raise ValueError(
+                f"chunk {chunk} must be in [1, {limit}] "
+                "(cache ring capacity bounds the per-tick chunk)"
+            )
         self.pool = SlotKVPool(model, num_slots, max_seq)
 
-        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, self.max_seq))
-        self._decode = jax.jit(self._decode_sample)
-        self._set_row = jax.jit(
-            lambda buf, row, i: jax.lax.dynamic_update_slice(
-                buf, row[None].astype(buf.dtype), (i, 0)
-            )
+        # Donating the tick-carried state (cache tree, held logits,
+        # positions, key) lets XLA update the cache in place instead of
+        # copying it every tick (~20% off a smoke-scale decode tick); the
+        # engine immediately rebinds each donated input to the returned
+        # value, so no stale reference survives.
+        self._decode = jax.jit(self._decode_sample, donate_argnums=(1, 2, 3, 6))
+        self._fused = jax.jit(self._fused_step, donate_argnums=(1, 2, 4, 9))
+        # Per-prompt-length prefill jits.  Chunked prefill leaves this empty
+        # by construction; any future fallback that traces a prompt-length-
+        # dependent prefill MUST register it here so the metric (and the
+        # bench's compile-count trajectory) actually counts it.
+        self._length_prefills: dict = {}
+        # family-initial batch-1 cache paged in at admission (chunked prefill
+        # starts from an empty slot; built once, reused for every request)
+        self._fresh_cache = model.fresh_request_cache(self.max_seq)
+        self._encode_cross = (
+            jax.jit(model.encode_cross_kv)
+            if model.cfg.family == "encdec" else None
         )
         self.reset(scheduler)
 
@@ -170,42 +212,91 @@ class ContinuousEngine:
         identical per-slot key streams)."""
         self.pool.reset()
         vocab = self.model.cfg.vocab
-        # device-resident held logits; positions live host-side in the pool
-        # (single source of truth), active/temps derive from _slots at step
+        # Device-resident per-tick state: held logits, positions, active
+        # mask, temps and the PRNG key all live on device and evolve in-jit;
+        # the host mirrors (pool.positions, _temps, _slots) are refreshed
+        # onto the device only when admission/completion changes lane
+        # residency (_lanes_dirty), so a steady-state tick costs exactly one
+        # jitted dispatch + one token download.
         self._last_logits = jnp.zeros((self.num_slots, vocab), jnp.float32)
         self._temps = np.zeros(self.num_slots, np.float32)
         self._slots: list[Optional[_SlotState]] = [None] * self.num_slots
+        self._pos_dev = jnp.zeros(self.num_slots, jnp.int32)
+        self._active_dev = jnp.zeros(self.num_slots, bool)
+        self._temps_dev = jnp.zeros(self.num_slots, jnp.float32)
+        self._lanes_dirty = True
         self._key = jax.random.PRNGKey(self.cfg.seed)
         self.step_count = 0
         self.completions: list[Completion] = []
         self._active_steps = 0   # sum over decode steps of active-slot count
         self._decode_steps = 0
+        self._fused_ticks = 0    # ticks that carried at least one prefill lane
+        self._prefill_lane_steps = 0  # sum over ticks of prefilling slots
         self._generated = 0
-        self.scheduler = scheduler or FCFSScheduler()
+        self.phase_log: list[tuple[int, int]] = []  # (prefill, decode) lanes/tick
+        self.scheduler = scheduler or FCFSScheduler(chunk_grid=self.chunk)
 
     # ---------------------------------------------------------- jitted step --
+    def _sample_next(self, last_logits, active, is_prefill, temps, key):
+        """Next decode token per slot from the held logits.  The key evolves
+        inside the step (split traced) so ticks cost no extra host dispatch."""
+        key, sub = jax.random.split(key)
+        greedy = jnp.argmax(last_logits, axis=-1)
+        tsafe = jnp.where(temps > 0, temps, 1.0)
+        keys = jax.random.split(sub, self.num_slots)
+        sampled = jax.vmap(jax.random.categorical)(keys, last_logits / tsafe[:, None])
+        nxt = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+        return jnp.where(active & ~is_prefill, nxt, 0), key
+
     def _decode_sample(self, params, cache, last_logits, positions, active,
                        temps, key):
         """Sample one token per slot from the held logits, then decode it.
-        Everything per-slot is a traced array -> a single compilation."""
-        greedy = jnp.argmax(last_logits, axis=-1)
-        tsafe = jnp.where(temps > 0, temps, 1.0)
-        keys = jax.random.split(key, self.num_slots)
-        sampled = jax.vmap(jax.random.categorical)(keys, last_logits / tsafe[:, None])
-        nxt = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
-        nxt = jnp.where(active, nxt, 0)
+        Everything per-slot is a traced array -> a single compilation.
+        Positions advance in-jit; the host mirror tracks them without a
+        per-tick transfer."""
+        nxt, key = self._sample_next(
+            last_logits, active, jnp.zeros_like(active), temps, key
+        )
         pos = jnp.where(active, positions, 0)  # clamp dont-care lanes in range
         logits, ncache = self.model.decode_step_slots(params, cache, nxt[:, None], pos)
         new_last = jnp.where(
             active[:, None], logits[:, 0].astype(jnp.float32), last_logits
         )
-        return nxt, new_last, ncache
+        new_positions = positions + jnp.where(active, 1, 0).astype(positions.dtype)
+        return nxt, new_last, ncache, new_positions, key
+
+    def _fused_step(self, params, cache, last_logits, chunk_tokens, positions,
+                    n_valid, is_prefill, active, temps, key):
+        """The fused tick: every slot processes a (chunk,)-token lane set —
+        decoding slots sample their next token from the held logits into
+        lane 0 (n_valid=1), prefilling slots take the staged prompt chunk.
+        One compilation covers every phase/length/occupancy mix."""
+        dec, key = self._sample_next(last_logits, active, is_prefill, temps, key)
+        lane0 = jnp.zeros_like(chunk_tokens).at[:, 0].set(dec)
+        tokens = jnp.where(is_prefill[:, None], chunk_tokens, lane0)
+        nv = jnp.where(active & is_prefill, n_valid, 1)
+        pos = jnp.where(active, positions, 0)  # clamp dont-care lanes in range
+        logits, ncache = self.model.fused_step_slots(params, cache, tokens, pos, nv)
+        # fused_step_slots already returns each slot's row n_valid-1 — the
+        # next-token distribution after the chunk: for decoders that's lane
+        # 0; for prefillers it becomes the first-token logits once the final
+        # chunk lands (mid-prompt values are interim, overwritten by later
+        # chunks).
+        new_last = jnp.where(
+            active[:, None], logits[:, 0].astype(jnp.float32), last_logits
+        )
+        new_positions = positions + jnp.where(active, nv, 0).astype(positions.dtype)
+        return dec, new_last, ncache, new_positions, key
 
     # ------------------------------------------------------------ admission --
     def submit(self, req: Request) -> int:
         return self.scheduler.submit(req)
 
     def _admit(self) -> list[int]:
+        """Page empty cache slots in for ready requests.  No forward pass
+        happens here — the fused step drains the prompt chunk-by-chunk —
+        so admission cost is one traced-slot insert regardless of prompt
+        length, and there is no per-prompt-length prefill compilation."""
         admitted = []
         while self.pool.num_free:
             req = self.scheduler.pop_ready(self.step_count)
@@ -217,18 +308,26 @@ class ContinuousEngine:
                     f"{req.max_new_tokens} new tokens exceeds max_seq {self.max_seq}"
                 )
             slot = self.pool.allocate()
-            batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None]}
-            for k, v in req.extras.items():
-                batch[k] = jnp.asarray(v)[None]
-            logits, cache = self._prefill(self.params, batch)
-            self.pool.insert(cache, slot, req.prompt_len)
-            self._last_logits = self._set_row(self._last_logits, logits[0, -1], slot)
+            fresh = self._fresh_cache
+            if self._encode_cross is not None:
+                frames = jnp.asarray(req.extras["frames"])[None]
+                fresh = {**fresh, "cross": self._encode_cross(self.params, frames)}
+            if self.model.cfg.family == "vlm":
+                dt = jnp.dtype(self.model.cfg.dtype)
+                fresh = {**fresh,
+                         "patches": jnp.asarray(req.extras["patches"])[None].astype(dt)}
+            self.pool.insert(fresh, slot, position=0)
+            padded = req.padded_tokens
+            if padded is None or padded.shape[0] % self.chunk:
+                padded = pad_to_grid(req.tokens, self.chunk)
             temp = self.cfg.temperature if req.temperature is None else req.temperature
             self._temps[slot] = float(temp)
             self._slots[slot] = _SlotState(
                 req=req, admit_step=self.step_count,
                 admit_time=time.time(), generated=[],
+                phase="prefilling", padded=padded, written=0,
             )
+            self._lanes_dirty = True
             admitted.append(req.id)
         return admitted
 
@@ -250,6 +349,7 @@ class ContinuousEngine:
         ))
         self._slots[slot] = None
         self.pool.free(slot)
+        self._lanes_dirty = True
 
     # ----------------------------------------------------------- main loop --
     def step(self) -> bool:
@@ -263,18 +363,56 @@ class ContinuousEngine:
                 return True
             return False
 
-        self._key, sub = jax.random.split(self._key)
-        active = np.array([st is not None for st in self._slots])
-        nxt, self._last_logits, self.pool.cache = self._decode(
-            self.params, self.pool.cache, self._last_logits,
-            self.pool.positions, active, self._temps, sub,
-        )
+        prefills = [s for s in live if self._slots[s].phase == "prefilling"]
+        decoders = [s for s in live if self._slots[s].phase == "decoding"]
+        if self._lanes_dirty:  # residency changed: refresh device mirrors
+            self._active_dev = jnp.asarray(
+                np.array([st is not None for st in self._slots])
+            )
+            self._temps_dev = jnp.asarray(self._temps)
+            self._pos_dev = jnp.asarray(self.pool.positions)
+            self._lanes_dirty = False
+
+        takes: dict[int, int] = {}
+        if prefills:
+            chunk_toks = np.zeros((self.num_slots, self.chunk), np.int32)
+            n_valid = np.ones(self.num_slots, np.int32)
+            is_pref = np.zeros(self.num_slots, bool)
+            for s in prefills:
+                st = self._slots[s]
+                takes[s] = min(self.chunk, st.req.prompt_len - st.written)
+                chunk_toks[s] = st.padded[st.written : st.written + self.chunk]
+                n_valid[s] = takes[s]
+                is_pref[s] = True
+            nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
+                self._fused(
+                    self.params, self.pool.cache, self._last_logits, chunk_toks,
+                    self._pos_dev, n_valid, is_pref, self._active_dev,
+                    self._temps_dev, self._key,
+                )
+            )
+            self._fused_ticks += 1
+        else:  # steady state: every live slot decodes -> the (N, 1) step
+            nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
+                self._decode(
+                    self.params, self.pool.cache, self._last_logits,
+                    self._pos_dev, self._active_dev, self._temps_dev, self._key,
+                )
+            )
         toks = np.asarray(nxt)
-        self.pool.advance(live)
+        self.pool.advance({s: takes.get(s, 1) for s in live})
         self._active_steps += len(live)
+        self._prefill_lane_steps += len(prefills)
         self._decode_steps += 1
-        self._generated += len(live)
-        for slot in live:
+        self._generated += len(decoders)
+        self.phase_log.append((len(prefills), len(decoders)))
+
+        for slot in prefills:
+            st = self._slots[slot]
+            st.written += takes[slot]
+            if st.written == st.req.prompt_len:
+                st.phase = "decoding"  # first token samples next tick
+        for slot in decoders:
             st = self._slots[slot]
             tok = int(toks[slot])
             st.generated.append(tok)
@@ -296,7 +434,10 @@ class ContinuousEngine:
         order."""
         for req in requests:
             self.submit(req)
-        budget = 10_000 + sum(r.arrival_step + r.max_new_tokens for r in requests)
+        budget = 10_000 + sum(
+            r.arrival_step + r.max_new_tokens + -(-r.prompt_len // self.chunk)
+            for r in requests
+        )
         while self.step():
             if self.step_count > budget:
                 raise RuntimeError("ContinuousEngine failed to drain workload")
@@ -305,13 +446,23 @@ class ContinuousEngine:
     # -------------------------------------------------------------- metrics --
     def metrics(self) -> dict:
         util = self._active_steps / max(1, self._decode_steps * self.num_slots)
+        pref = self._prefill_lane_steps / max(1, self._active_steps)
         return {
             "decode_steps": self._decode_steps,
             "generated_tokens": self._generated,
             "mean_slot_utilization": util,
+            "prefill_lane_fraction": pref,
+            "fused_ticks": self._fused_ticks,
             "completions": len(self.completions),
+            "chunk": self.chunk,
+            "intake_padding": getattr(self.scheduler, "intake_padding", 0),
             "decode_compilations": _jit_compilations(self._decode),
-            "prefill_compilations": _jit_compilations(self._prefill),
+            "fused_step_compilations": _jit_compilations(self._fused),
+            # chunked prefill rides the fused step: _length_prefills stays
+            # empty unless a fallback reintroduces per-length tracing.
+            "prefill_compilations": sum(
+                _jit_compilations(f) or 0 for f in self._length_prefills.values()
+            ),
         }
 
 

@@ -34,7 +34,9 @@ class SlotKVPool:
         self.positions = np.zeros(self.num_slots, np.int32)
         self._free: deque[int] = deque(range(self.num_slots))
         self._used: set[int] = set()
-        self._insert = jax.jit(model.insert_cache_slot)
+        # the pool cache is rebound to insert's return value, so donating it
+        # lets the per-slot page-in write in place instead of copying
+        self._insert = jax.jit(model.insert_cache_slot, donate_argnums=(0,))
         self._extract = jax.jit(model.extract_cache_slot)
 
     # ------------------------------------------------------------ residency --
@@ -82,7 +84,16 @@ class SlotKVPool:
         """Read a slot back out as a batch=1 cache (debug/migration path)."""
         return self._extract(self.cache, slot)
 
-    def advance(self, slots) -> None:
-        """Advance the positions of the given slots by one decoded token."""
-        for slot in slots:
-            self.positions[slot] += 1
+    def advance(self, slots, by: int = 1) -> None:
+        """Advance slot positions.  ``slots`` is an iterable of slot ids
+        (each advanced ``by`` — one decoded token by default) or a
+        {slot: n} mapping for offset-ranged chunk writes, where n is the
+        number of tokens the fused step just committed to that slot."""
+        items = slots.items() if isinstance(slots, dict) else ((s, by) for s in slots)
+        for slot, n in items:
+            new = int(self.positions[slot]) + int(n)
+            if new > self.max_seq:
+                raise ValueError(
+                    f"slot {slot}: position {new} exceeds max_seq {self.max_seq}"
+                )
+            self.positions[slot] = new

@@ -19,6 +19,23 @@ from typing import Optional
 import numpy as np
 
 
+def pad_to_grid(tokens, grid: int) -> np.ndarray:
+    """Right-pad a prompt to the next multiple of the chunk grid.
+
+    This is the bucketing rule of the fused serving step: every prompt is
+    quantized to the chunk grid at intake, so the engine's per-tick shape is
+    always (num_slots, chunk) and one compilation covers every prompt-length
+    mix.  Padding is bounded by grid-1 tokens and the pad tokens are never
+    computed on — the fused step masks lanes >= the true remaining length
+    (they neither enter the cache nor advance recurrent state).
+    """
+    t = np.asarray(tokens, np.int32).reshape(-1)
+    if grid <= 1:
+        return t
+    rem = (-t.shape[0]) % grid
+    return np.concatenate([t, np.zeros(rem, np.int32)]) if rem else t
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request.  ``tokens`` is the prompt, shape (prompt_len,).
@@ -27,6 +44,9 @@ class Request:
     (``frames`` for encdec, ``patches`` for vlm); the engine adds the batch
     axis at prefill.  ``arrival_step`` stamps when the request becomes
     visible on the engine's decode-step clock (0 = already waiting).
+    ``padded_tokens`` is stamped by a chunk-gridded scheduler at submit
+    (see ``pad_to_grid``); engines fall back to padding at admission when
+    it is absent or on a different grid.
     """
 
     tokens: np.ndarray
@@ -36,6 +56,7 @@ class Request:
     arrival_step: int = 0
     extras: dict = dataclasses.field(default_factory=dict)
     id: int = -1  # assigned by the scheduler on submit
+    padded_tokens: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
 
     @property
     def prompt_len(self) -> int:
@@ -75,11 +96,19 @@ class Completion:
 class FCFSScheduler:
     """First-come-first-served admission.  The head of the queue blocks —
     a later-arriving short request never jumps an earlier long one, which
-    keeps admission order (and therefore slot assignment) deterministic."""
+    keeps admission order (and therefore slot assignment) deterministic.
 
-    def __init__(self):
+    With ``chunk_grid`` > 0 the scheduler buckets waiting prompts to the
+    fused step's chunk grid at submit (``pad_to_grid``): intake padding is
+    bounded by grid-1 tokens per request and the engine's per-tick shape is
+    independent of the prompt-length mix, so the fused step compiles once.
+    """
+
+    def __init__(self, chunk_grid: int = 0):
+        self.chunk_grid = int(chunk_grid)
         self._queue: deque[Request] = deque()
         self._next_id = 0
+        self._pad_tokens = 0  # total intake padding (bucketing overhead)
 
     def submit(self, req: Request) -> int:
         if req.max_new_tokens < 1:
@@ -90,8 +119,16 @@ class FCFSScheduler:
         if req.id < 0:
             req.id = self._next_id
         self._next_id = max(self._next_id, req.id) + 1
+        if self.chunk_grid:
+            req.padded_tokens = pad_to_grid(req.tokens, self.chunk_grid)
+            self._pad_tokens += int(req.padded_tokens.shape[0]) - req.prompt_len
         self._queue.append(req)
         return req.id
+
+    @property
+    def intake_padding(self) -> int:
+        """Total pad tokens added by bucketing (<= (grid-1) per request)."""
+        return self._pad_tokens
 
     def pop_ready(self, step: int) -> Optional[Request]:
         """Head of the queue if it has arrived by engine step ``step``."""

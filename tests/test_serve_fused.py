@@ -1,0 +1,179 @@
+"""Fused chunked-prefill serving step tests (PR 2).
+
+Pinned invariants:
+  1. ONE fused-step compilation across a workload with >= 4 distinct prompt
+     lengths, and ZERO per-prompt-length prefill compilations;
+  2. greedy continuous batching stays token-identical to the static oracle
+     when prompts cross a chunk boundary mid-prompt (length not a multiple
+     of the chunk) — dense, ssm and hybrid families;
+  3. the intake bucketing rule: prompts quantize to the chunk grid with
+     bounded padding, and pad tokens never reach the cache;
+  4. offset-ranged slot-position advances (kv_cache) validate bounds;
+  5. `Model.prefill_chunk` streamed over a prompt reproduces the monolithic
+     `prefill` cache and next-token logits bit-exactly (dense).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduce_config
+from repro.data.synthetic import DataConfig, batch_at
+from repro.models.transformer import make_model
+from repro.serve.engine import ContinuousEngine, ServeConfig, static_reference
+from repro.serve.kv_cache import SlotKVPool
+from repro.serve.scheduler import FCFSScheduler, Request, pad_to_grid
+from repro.serve.workload import required_max_seq
+
+
+def _prompt(cfg, length, seed):
+    data = DataConfig(vocab=cfg.vocab, seq_len=length, global_batch=1, seed=seed)
+    return np.asarray(batch_at(data, 0)["tokens"][0], np.int32)
+
+
+def _model_for(arch):
+    cfg = reduce_config(get_config(arch))
+    model = make_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+# -------------------------------------------------- one compilation, ever ---
+def test_fused_step_compiles_once_across_prompt_length_mix():
+    cfg, model, params = _model_for("internlm2-1.8b")
+    scfg = ServeConfig()
+    # >= 4 distinct prompt lengths, none aligned to the chunk grid
+    lens = [5, 9, 14, 22, 7, 17]
+    reqs = [
+        Request(id=i, tokens=_prompt(cfg, L, seed=100 + i), max_new_tokens=4,
+                arrival_step=i)
+        for i, L in enumerate(lens)
+    ]
+    engine = ContinuousEngine(model, params, num_slots=3,
+                              max_seq=required_max_seq(reqs), cfg=scfg, chunk=4)
+    comps = engine.run(reqs)
+    assert len(comps) == len(lens)
+    m = engine.metrics()
+    # the whole point: one fused compilation regardless of the length mix,
+    # and no per-prompt-length prefill jit at all
+    assert m["fused_step_compilations"] in (1, None)
+    assert m["decode_compilations"] in (1, None)
+    assert m["prefill_compilations"] == 0
+    assert m["fused_ticks"] > 0
+    ref = static_reference(model, params, reqs, scfg)
+    for c in comps:
+        assert np.array_equal(c.tokens, ref[c.request_id]), f"req {c.request_id}"
+
+
+# ------------------------------------- chunk-boundary greedy identity -------
+def _extras_for(cfg):
+    if cfg.family == "encdec":
+        return {"frames": np.zeros((cfg.encoder_seq, cfg.d_model), np.float32)}
+    if cfg.family == "vlm":
+        return {"patches": np.zeros((cfg.num_patches, cfg.d_model), np.float32)}
+    return {}
+
+
+@pytest.mark.parametrize("arch", [
+    "internlm2-1.8b",        # dense
+    "xlstm-350m",            # ssm (mlstm carries + stabilizer init)
+    "zamba2-7b",             # hybrid (shared attn kv + mamba2 carries)
+    "minicpm3-4b",           # mla (latent cache chunk writes)
+    "whisper-large-v3",      # encdec (encode_cross_kv admission path)
+    "llama-3.2-vision-11b",  # vlm (per-slot patches memory)
+])
+def test_chunk_boundary_greedy_identity(arch):
+    """Prompt lengths that are NOT multiples of the chunk size (the final
+    chunk is partial: masked lanes must neither enter the cache nor advance
+    recurrent state) across every family the chunk path claims bit-identity
+    for (MoE is excluded by design: GShard capacity is group-dependent)."""
+    cfg, model, params = _model_for(arch)
+    scfg = ServeConfig()
+    chunk = 4
+    # 6, 10: cross one / two chunk boundaries with a partial tail; 3: a
+    # single partial chunk; 8: exact multiple as the control
+    reqs = [
+        Request(id=i, tokens=_prompt(cfg, L, seed=200 + i), max_new_tokens=5,
+                arrival_step=i, extras=_extras_for(cfg))
+        for i, L in enumerate([6, 10, 3, 8])
+    ]
+    engine = ContinuousEngine(model, params, num_slots=2,
+                              max_seq=required_max_seq(reqs), cfg=scfg,
+                              chunk=chunk)
+    comps = engine.run(reqs)
+    ref = static_reference(model, params, reqs, scfg)
+    assert len(comps) == 4
+    for c in comps:
+        assert np.array_equal(c.tokens, ref[c.request_id]), f"req {c.request_id}"
+    m = engine.metrics()
+    assert m["fused_step_compilations"] in (1, None)
+    assert m["prefill_compilations"] == 0
+
+
+# ----------------------------------------------------------- bucketing ------
+def test_pad_to_grid_bounds_and_identity():
+    t = np.arange(11, dtype=np.int32)
+    padded = pad_to_grid(t, 4)
+    assert padded.shape[0] == 12  # next grid point, padding < grid
+    assert np.array_equal(padded[:11], t)
+    assert np.array_equal(pad_to_grid(t, 1), t)   # grid 1 = no-op
+    assert np.array_equal(pad_to_grid(t, 0), t)
+    assert pad_to_grid(np.arange(8, dtype=np.int32), 4).shape[0] == 8  # aligned
+
+
+def test_scheduler_buckets_at_submit_and_tracks_padding():
+    sched = FCFSScheduler(chunk_grid=8)
+    r1 = Request(tokens=np.arange(5, dtype=np.int32))   # +3 pad
+    r2 = Request(tokens=np.arange(16, dtype=np.int32))  # aligned, +0
+    sched.submit(r1)
+    sched.submit(r2)
+    assert r1.padded_tokens.shape[0] == 8
+    assert r2.padded_tokens.shape[0] == 16
+    assert sched.intake_padding == 3
+
+
+def test_chunk_must_fit_cache():
+    cfg, model, params = _model_for("internlm2-1.8b")
+    with pytest.raises(ValueError):
+        ContinuousEngine(model, params, num_slots=1, max_seq=8, chunk=9)
+
+
+# ------------------------------------------------- offset-ranged advance ----
+def test_pool_offset_ranged_advance():
+    cfg, model, _ = _model_for("internlm2-1.8b")
+    pool = SlotKVPool(model, num_slots=2, max_seq=10)
+    pool.allocate(), pool.allocate()
+    pool.advance({0: 4, 1: 1})
+    assert pool.positions[0] == 4 and pool.positions[1] == 1
+    pool.advance([0, 1])  # legacy iterable form: +1 each
+    assert pool.positions[0] == 5 and pool.positions[1] == 2
+    with pytest.raises(ValueError):
+        pool.advance({0: 6})  # 5 + 6 > max_seq
+
+
+# ------------------------------------- model-level chunk-stream identity ----
+def test_prefill_chunk_stream_matches_monolithic_prefill():
+    cfg, model, params = _model_for("internlm2-1.8b")
+    plen, chunk, max_seq = 11, 4, 16
+    toks = _prompt(cfg, plen, seed=7)
+    logits_ref, cache_ref = jax.jit(
+        lambda p, b: model.prefill(p, b, max_seq)
+    )(params, {"tokens": jnp.asarray(toks)[None]})
+
+    cache = model.fresh_request_cache(max_seq)
+    step = jax.jit(model.prefill_chunk)
+    padded = pad_to_grid(toks, chunk)
+    written, last = 0, None
+    while written < plen:
+        take = min(chunk, plen - written)
+        logits, cache = step(
+            params, cache, jnp.asarray(padded[written:written + chunk])[None],
+            jnp.int32(written), jnp.int32(take),
+        )
+        last = logits[0, take - 1]
+        written += take
+
+    assert bool(jnp.all(last == logits_ref[0, -1]))
+    ref_leaves = jax.tree.leaves(cache_ref)
+    new_leaves = jax.tree.leaves(cache)
+    for a, b in zip(ref_leaves, new_leaves):
+        assert np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
