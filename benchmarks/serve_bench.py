@@ -13,17 +13,31 @@ timed end-to-end on the identical request set.  Emits the BENCH_serve.json
 schema (written to experiments/results/) so future PRs can track the
 serving-throughput trajectory:
 
-  {"benchmark": "serve", "arch": ..., "workload": {...},
+  {"benchmark": "serve", "arch": ..., "workload": {... incl. "arch"},
    "static": {"wall_s", "cold_wall_s", "tokens_per_s", "batches"},
    "continuous": {"wall_s", "cold_wall_s", "tokens_per_s", "decode_steps",
                   "fused_ticks", "mean_slot_utilization",
                   "prefill_lane_fraction", "chunk", "intake_padding",
                   "decode_compilations", "fused_step_compilations",
-                  "prefill_compilations"},
+                  "prefill_compilations", "kv_hbm_bytes",
+                  + paged: "num_blocks", "block_size", "peak_blocks_in_use",
+                  "peak_blocks_reserved", "block_utilization"},
+   "kv": {"paged", "slab_hbm_bytes", "kv_hbm_bytes",
+          + paged: "num_blocks", "block_size", "slab_slots_at_equal_hbm",
+          "equal_hbm_slots_gain"},
    "speedup": ..., "cold_speedup": ..., "greedy_token_identical": ...,
-   "history": [{"git_sha", "workload_hash", "timestamp", "speedup",
+   "history": [{"git_sha", "arch", "workload_hash", "timestamp", "speedup",
                 "cold_speedup", "tokens_per_s", "prefill_compilations",
-                "decode_compilations", "fused_step_compilations"}, ...]}
+                "decode_compilations", "fused_step_compilations",
+                "kv_hbm_bytes", "num_blocks", "block_utilization",
+                "equal_hbm_slots_gain"}, ...]}
+
+The paged-KV measurement runs the workload twice on the continuous engine:
+once with a slab-equivalent arena (never admission-blocks) to learn the
+peak concurrent block reservation, then with the arena cut to exactly that
+peak — proving the same slot count serves from a live-token-sized arena.
+``workload`` (and therefore ``workload_hash``) includes ``arch``: older
+rows without it remain readable but hash-segregated.
 
 ``cold_wall_s`` is the first serve of the workload including compile time —
 the static path compiles a prefill per distinct prompt length and a decode
@@ -54,6 +68,7 @@ from benchmarks.common import writeout
 from repro.configs.registry import get_config, list_archs, reduce_config
 from repro.models.transformer import make_model
 from repro.serve.engine import ContinuousEngine, ServeConfig, static_reference
+from repro.serve.kv_cache import tree_bytes
 from repro.serve.workload import required_max_seq, staggered_requests
 
 _RESULTS = Path(__file__).resolve().parent.parent / "experiments" / "results"
@@ -88,12 +103,18 @@ def _load_history() -> list:
 
 def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         max_new: int = 16, num_slots: int = 0, stagger: int = 1,
-        chunk: int = 8, reps: int = 10) -> dict:
+        chunk: int = 8, reps: int = 10, tail_len: int = -1) -> dict:
     cfg = reduce_config(get_config(arch))
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    # long-tail mix (one 8x-base prompt per 8 requests): the regime where a
+    # slab pool's HBM is capped by the tail length while a block-paged pool
+    # only spends blocks on live tokens.  --tail-len 0 disables.
+    if tail_len < 0:
+        tail_len = 8 * base_len
     reqs = staggered_requests(cfg, n_requests=n_requests, base_len=base_len,
-                              max_new_tokens=max_new, stagger=stagger, seed=23)
+                              max_new_tokens=max_new, stagger=stagger, seed=23,
+                              tail_len=tail_len, tail_every=8 if tail_len else 0)
     # half the request count keeps the pool busy (~70% util) while static
     # still pays per-group batch fragmentation — the measured sweet spot
     num_slots = num_slots or max(2, n_requests // 2)
@@ -120,6 +141,34 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
     engine.run(reqs)
     cold_cont_s = time.time() - t0
 
+    # Paged families: the cold engine's slab-equivalent arena never
+    # admission-blocks, so its peak reservation measures the workload's true
+    # concurrent-token footprint.  Re-run with the arena cut to exactly that
+    # peak — proving the workload still serves — and report HBM against the
+    # slab baseline (tight-engine compiles are excluded from cold_wall_s,
+    # which times the default-arena engine above).
+    per_slot_slab_bytes = tree_bytes(model.cache_specs(1, max_seq))
+    kv = {"paged": engine.paged, "slab_hbm_bytes": num_slots * per_slot_slab_bytes}
+    if engine.paged:
+        tight_blocks = engine.pool.peak_blocks_reserved
+        engine = ContinuousEngine(model, params, num_slots=num_slots,
+                                  max_seq=max_seq, cfg=scfg, chunk=chunk,
+                                  num_blocks=tight_blocks)
+        engine.run(reqs)  # warm the tight engine (and prove it serves)
+        paged_hbm = engine.pool.hbm_bytes()
+        slab_slots = paged_hbm // per_slot_slab_bytes
+        kv.update(
+            kv_hbm_bytes=paged_hbm,
+            num_blocks=tight_blocks,
+            block_size=engine.pool.block_size,
+            # how many slab slots the paged pool's HBM would buy, and the
+            # slot multiplier at equal memory (the acceptance number)
+            slab_slots_at_equal_hbm=int(slab_slots),
+            equal_hbm_slots_gain=num_slots / max(1, int(slab_slots)),
+        )
+    else:
+        kv.update(kv_hbm_bytes=engine.pool.hbm_bytes())
+
     # The two engines are timed back-to-back in interleaved rep pairs and
     # the reported wall time is the *mean over reps of the summed* time per
     # engine: on a noisy shared host, contention bursts are shorter than a
@@ -139,6 +188,10 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
 
     identical = all(np.array_equal(c.tokens, ref[c.request_id]) for c in comps)
     workload = {
+        # arch is part of the workload identity: without it, runs with
+        # different --arch hashed alike and polluted one history trajectory
+        # (masking per-arch compile-count regressions)
+        "arch": arch,
         "n_requests": n_requests,
         "prompt_lens": sorted({r.prompt_len for r in reqs}),
         "max_new_tokens": sorted({r.max_new_tokens for r in reqs}),
@@ -146,6 +199,7 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         "arrival_stagger": stagger,
         "num_slots": num_slots,
         "chunk": chunk,
+        "tail_len": tail_len,
     }
     payload = {
         "benchmark": "serve",
@@ -170,7 +224,15 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
             "decode_compilations": m["decode_compilations"],
             "fused_step_compilations": m["fused_step_compilations"],
             "prefill_compilations": m["prefill_compilations"],
+            "kv_hbm_bytes": m["kv_hbm_bytes"],
+            **({"num_blocks": m["num_blocks"],
+                "block_size": m["block_size"],
+                "peak_blocks_in_use": m["peak_blocks_in_use"],
+                "peak_blocks_reserved": m["peak_blocks_reserved"],
+                "block_utilization": m["block_utilization"]}
+               if m["kv_paged"] else {}),
         },
+        "kv": kv,
         "speedup": static_s / cont_s,
         "cold_speedup": cold_static_s / cold_cont_s,
         "greedy_token_identical": identical,
@@ -178,6 +240,7 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
     history = _load_history()
     history.append({
         "git_sha": _git_sha(),
+        "arch": arch,
         "workload_hash": _workload_hash(workload),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "speedup": payload["speedup"],
@@ -187,6 +250,13 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         "prefill_compilations": m["prefill_compilations"],
         "decode_compilations": m["decode_compilations"],
         "fused_step_compilations": m["fused_step_compilations"],
+        "kv_hbm_bytes": m["kv_hbm_bytes"],
+        # paged-only columns are omitted (not nulled) on slab archs, like
+        # the payload's continuous section — nulls read as broken counters
+        **({"num_blocks": m["num_blocks"],
+            "block_utilization": m["block_utilization"],
+            "equal_hbm_slots_gain": kv["equal_hbm_slots_gain"]}
+           if m["kv_paged"] else {}),
     })
     payload["history"] = history[-_HISTORY_MAX:]
     return writeout("BENCH_serve", payload)
@@ -200,9 +270,11 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--num-slots", type=int, default=0, help="0 = n_requests/2")
     ap.add_argument("--chunk", type=int, default=8, help="prefill chunk size")
+    ap.add_argument("--tail-len", type=int, default=-1,
+                    help="long-tail prompt length (-1 = 8*base_len, 0 = off)")
     args = ap.parse_args()
     payload = run(args.arch, args.requests, args.base_len, args.new_tokens,
-                  args.num_slots, chunk=args.chunk)
+                  args.num_slots, chunk=args.chunk, tail_len=args.tail_len)
     print(json.dumps({k: v for k, v in payload.items() if k != "history"},
                      indent=2, default=float))
     s, c = payload["static"], payload["continuous"]
@@ -218,6 +290,18 @@ def main():
     print(f"compilations: fused={c['fused_step_compilations']} "
           f"decode={c['decode_compilations']} prefill={c['prefill_compilations']}"
           f"  (history: {len(payload['history'])} runs)")
+    kv = payload["kv"]
+    if kv["paged"]:
+        print(f"paged KV: {c['num_blocks']} blocks x {c['block_size']} tok "
+              f"= {kv['kv_hbm_bytes']/1024:.1f} KiB resident "
+              f"(slab pool: {kv['slab_hbm_bytes']/1024:.1f} KiB); at equal HBM "
+              f"the slab serves {kv['slab_slots_at_equal_hbm']} slots vs "
+              f"{payload['workload']['num_slots']} paged -> "
+              f"{kv['equal_hbm_slots_gain']:.1f}x slots "
+              f"(peak util {c['block_utilization']*100:.0f}%)")
+    else:
+        print(f"slot-slab KV (family has no pageable cache): "
+              f"{kv['kv_hbm_bytes']/1024:.1f} KiB resident")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,194 @@
+"""Paged-KV decode attention with online GN-Softmax — Pallas TPU kernel.
+
+The serving engine's block-paged KV pool stores each sequence as a chain of
+``block_size``-token blocks scattered through a shared arena; a per-sequence
+block *table* maps logical block j to its physical arena slot.  This kernel
+streams a decode query over that chain exactly like ``gn_attention`` streams
+over a contiguous row: the k/v BlockSpec index map reads the physical block
+id out of a scalar-prefetched table (so the DMA engine chases the table, no
+gather materialization in HBM), and the (max, sum, acc) carries use the same
+snap-to-Δ-grid stabilizer:
+
+  * the running max is snapped *up* to the Δ grid, so the online correction
+    e^{m_old − m_new} goes through the same LUT unit grid-exactly and the
+    per-block accumulation order drops out of the result;
+  * the final division acc / l divides the accumulated LUT'd numerators by
+    their own sum — Σp = 1 holds to one rounding *independent of the block
+    layout*, which is the normalization guarantee the paged pool must not
+    break.
+
+Grid: (n_seqs, q_heads, max_blocks_per_seq), block axis innermost/arbitrary;
+GQA maps k/v to head ``h // group``.  Blocks at or past a sequence's context
+length are skipped entirely (their table entries may point at recycled or
+foreign blocks — never read).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT
+from repro.kernels.common import exp_lut_operands, factorized_exp, snap_up_to_grid
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4/0.5; accept both.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+NEG_INF = -1e30
+
+
+def _gn_paged_attention_kernel(
+    tables_ref,  # scalar prefetch: (N, max_bt) int32 physical block ids
+    lens_ref,  # scalar prefetch: (N,) int32 context lengths
+    q_ref,  # (1, 1, bq, d)
+    k_ref,  # (1, 1, bs_p, d) — physical block tables_ref[n, j]
+    v_ref,  # (1, 1, bs_p, d)
+    coarse_ref,  # (1, 128) exp LUT operand
+    residual_ref,  # (1, 128k) exp LUT operand
+    o_ref,  # (1, 1, bq, d)
+    acc_ref,  # (bq, d) f32 scratch
+    m_ref,  # (bq, 128) f32 scratch
+    l_ref,  # (bq, 128) f32 scratch
+    *,
+    cfg: SoftmaxLUTConfig,
+    sm_scale: float,
+    block_size: int,  # true tokens per block (bs_p >= block_size is padding)
+    block_pad: int,
+):
+    n = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    length = lens_ref[n]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bs_p)
+        bq, bs_p = s.shape
+
+        # mask: absolute position j*block_size + r must be < length, and the
+        # padded tail rows (r >= block_size) of the physical block are inert
+        r = jax.lax.broadcasted_iota(jnp.int32, (bq, bs_p), 1)
+        mask = (r < block_size) & (j * block_size + r < length)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_old = m_ref[:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = snap_up_to_grid(jnp.maximum(m_old, m_cur), cfg)
+        any_valid = jnp.max(mask.astype(jnp.int32), axis=-1, keepdims=True) > 0
+        m_new = jnp.where(any_valid | (m_old > NEG_INF / 2), m_new, m_old)
+
+        corr_delta = jnp.clip(m_new - m_old, 0.0, cfg.step * (cfg.max_delta_int + 1))
+        corr = factorized_exp(corr_delta, coarse_ref[...], residual_ref[...], cfg)
+        corr = jnp.where(m_old > NEG_INF / 2, corr, 0.0)
+
+        y = factorized_exp(
+            jnp.maximum(m_new - s, 0.0), coarse_ref[...], residual_ref[...], cfg
+        )
+        y = jnp.where(mask & (m_new > NEG_INF / 2), y, 0.0)
+
+        l_new = l_ref[:, :1] * corr + jnp.sum(y, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            y, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    # skip blocks wholly past the context: their table entries may name
+    # recycled/foreign blocks and must never be read
+    pl.when(j * block_size < length)(_body)
+
+    @pl.when(j == nj - 1)
+    def _fini():
+        # guaranteed normalization: same LUT'd numerators over their own sum
+        l = l_ref[:, :1]
+        l = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] * (1.0 / l)).astype(o_ref.dtype)
+
+    del block_pad  # layout bookkeeping lives in ops.py
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "sm_scale", "block_size", "interpret"),
+)
+def gn_paged_attention_pallas(
+    q: jax.Array,  # (N, H, bq, d) — row 0 is the decode query
+    k_arena: jax.Array,  # (nb, Hkv, bs_p, d)
+    v_arena: jax.Array,  # (nb, Hkv, bs_p, d)
+    tables: jax.Array,  # (N, max_bt) int32
+    lengths: jax.Array,  # (N,) int32
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+    sm_scale: float | None = None,
+    block_size: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    n, h, bq, d = q.shape
+    nb, hkv, bs_p, _ = k_arena.shape
+    if h % hkv:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {hkv}")
+    group = h // hkv
+    max_bt = tables.shape[1]
+    block_size = bs_p if block_size is None else block_size
+    if sm_scale is None:
+        sm_scale = d**-0.5
+
+    coarse, residual = exp_lut_operands(cfg)
+    grid = (n, h, max_bt)
+    kernel = functools.partial(
+        _gn_paged_attention_kernel,
+        cfg=cfg,
+        sm_scale=float(sm_scale),
+        block_size=int(block_size),
+        block_pad=bs_p - block_size,
+    )
+
+    def kv_index(n_, h_, j, tbl, lens):
+        # clamp skipped grid steps (j past the sequence's last valid block)
+        # to the last valid logical block: the kernel's pl.when already
+        # skips their compute, and a repeated index lets the pipeline elide
+        # the redundant DMA instead of streaming dead blocks for the whole
+        # max_bt tail of every short sequence
+        last = jnp.maximum((lens[n_] - 1) // block_size, 0)
+        return (tbl[n_, jnp.minimum(j, last)], h_ // group, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda n_, h_, j, tbl, lens: (n_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs_p, d), kv_index),
+            pl.BlockSpec((1, 1, bs_p, d), kv_index),
+            pl.BlockSpec(coarse.shape, lambda n_, h_, j, tbl, lens: (0, 0)),
+            pl.BlockSpec(residual.shape, lambda n_, h_, j, tbl, lens: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d), lambda n_, h_, j, tbl, lens: (n_, h_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(tables, lengths, q, k_arena, v_arena, coarse, residual)

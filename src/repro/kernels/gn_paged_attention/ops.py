@@ -1,0 +1,67 @@
+"""Jit'd public wrapper for paged GN decode attention (padding + GQA).
+
+Layout contract with the serving pool: the arena arrives in the pool's
+(num_blocks, block_size, KV, dh) layout; this wrapper transposes it to the
+kernel's head-major block layout and lane-pads the head dim, pads the query
+to the 8-row sublane grid, and trims everything back off the output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT
+from repro.kernels.gn_paged_attention.kernel import gn_paged_attention_pallas
+
+LANE = 128
+SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "sm_scale", "interpret")
+)
+def gn_paged_attention(
+    q: jax.Array,  # (N, H, D) one decode query per sequence
+    k_arena: jax.Array,  # (nb, bs, Hkv, D) — the pool's arena layout
+    v_arena: jax.Array,  # (nb, bs, Hkv, D)
+    tables: jax.Array,  # (N, max_bt) int32
+    lengths: jax.Array,  # (N,) int32 context lengths
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    n, h, d = q.shape
+    nb, bs, hkv, _ = k_arena.shape
+    if sm_scale is None:
+        sm_scale = d**-0.5  # scale uses the TRUE head dim, not the padded one
+
+    d_p = _round_up(d, LANE)
+    bs_p = _round_up(bs, SUBLANE)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, d_p - d)))[:, :, None]  # (N, H, 1, d_p)
+    qp = jnp.pad(qp, ((0, 0), (0, 0), (0, SUBLANE - 1), (0, 0)))
+    kp = jnp.pad(
+        k_arena.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, bs_p - bs), (0, d_p - d))
+    )
+    vp = jnp.pad(
+        v_arena.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, bs_p - bs), (0, d_p - d))
+    )
+
+    out = gn_paged_attention_pallas(
+        qp,
+        kp,
+        vp,
+        tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        cfg=cfg,
+        sm_scale=float(sm_scale),
+        block_size=bs,
+        interpret=interpret,
+    )
+    return out[:, :, 0, :d]

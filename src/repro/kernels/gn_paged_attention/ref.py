@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the paged GN decode-attention kernel.
+
+Semantics: gather each sequence's logical KV stream out of the block arena
+through its block table, then run the one-pass GN-Softmax attention over the
+valid prefix.  The kernel accumulates the *same* LUT'd numerators into both
+the weighted value sum and the denominator block-by-block, so it equals this
+reference up to float associativity — and both normalize by the numerators'
+own sum, so Σp = 1 to one rounding regardless of how the blocks are laid
+out in the arena.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luts import SoftmaxLUTConfig, TPU_SOFTMAX_LUT
+from repro.kernels.gn_softmax.ref import gn_softmax_ref
+
+
+def gn_paged_attention_ref(
+    q: jax.Array,  # (N, H, D) one decode query per sequence
+    k_arena: jax.Array,  # (nb, bs, H, D)  (kv heads already broadcast to H)
+    v_arena: jax.Array,  # (nb, bs, H, D)
+    tables: jax.Array,  # (N, max_bt) int32 physical block ids
+    lengths: jax.Array,  # (N,) int32 context lengths (tokens)
+    sm_scale: float | None = None,
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+) -> jax.Array:
+    if sm_scale is None:
+        sm_scale = q.shape[-1] ** -0.5
+    n = q.shape[0]
+    nb, bs = k_arena.shape[:2]
+    # gather the logical streams: (N, max_bt*bs, H, D)
+    k = k_arena[tables].reshape(n, -1, *k_arena.shape[2:])
+    v = v_arena[tables].reshape(n, -1, *v_arena.shape[2:])
+    s = jnp.einsum("nhd,nthd->nht", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    t = s.shape[-1]
+    valid = jnp.arange(t)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = gn_softmax_ref(s, cfg)
+    out = jnp.einsum("nht,nthd->nhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gn_paged_softmax_ref(
+    scores: jax.Array,  # (..., T) with masked tail already at -inf
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+) -> jax.Array:
+    """Row-wise GN softmax over a gathered score row — exposed so property
+    tests can check Σp = 1 on the exact probabilities the paged read uses."""
+    return gn_softmax_ref(scores, cfg)

@@ -232,6 +232,100 @@ def attn_decode_chunk(cfg: ModelConfig, p: dict, cache: dict, x, pos, n_valid):
     return out, {"k": k, "v": v}
 
 
+def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
+                     n_valid, tables):
+    """Block-paged chunked append-decode, batched over slots.
+
+    The slot-monolithic ``attn_decode_chunk`` owns a (max_seq,) slab per
+    sequence; here every sequence owns only a *block table* into a shared KV
+    arena, so resident HBM scales with live tokens instead of worst-case
+    length.  x: (N, C, D); positions/n_valid: (N,) int32 per-slot vectors;
+    tables: (N, max_bt) int32 physical-block ids per logical block;
+    arena_k/arena_v: (num_blocks, block_size, KV, dh).
+
+    Lane (s, i) writes absolute position positions[s]+i through the table
+    (lanes >= n_valid[s] scatter out of bounds and are dropped — n_valid=0
+    drops a whole slot, which is how inactive lanes are kept away from
+    blocks they don't own) and attends the gathered logical stream
+    [0, positions[s]+i].  Table entries past a slot's allocated prefix may
+    point at recycled or foreign blocks: every such column sits beyond the
+    causal mask, and the GN softmax turns masked scores into *exactly zero*
+    numerators (LUT saturation), so stale block contents cannot leak into
+    either the weighted sum or the normalizer — Σp = 1 over the same score
+    multiset as the slab path, independent of block layout.
+
+    Returns (out (N, C, D), (new arena_k, new arena_v)).
+    """
+    dt = x.dtype
+    b, c_len = x.shape[:2]
+    nb, bs = arena_k.shape[:2]
+    offs = jnp.arange(c_len)
+    rows = positions[:, None] + offs[None, :]  # (N, C) absolute positions
+    q = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)), cfg.n_heads, cfg.head_dim)
+    k_new = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wk"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wv"].astype(dt)), cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, rows, cfg.rope_theta)
+    k_new = apply_rope(k_new, rows, cfg.rope_theta)
+
+    dest = paged_write_indices(rows, n_valid, tables, bs, nb)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    flat_k = arena_k.reshape(nb * bs, kv, dh)
+    flat_v = arena_v.reshape(nb * bs, kv, dh)
+    flat_k = flat_k.at[dest].set(k_new.reshape(b * c_len, kv, dh).astype(flat_k.dtype), mode="drop")
+    flat_v = flat_v.at[dest].set(v_new.reshape(b * c_len, kv, dh).astype(flat_v.dtype), mode="drop")
+
+    if cfg.use_pallas and c_len == 1:
+        # single-chip TPU hot path: the Pallas kernel chases the block table
+        # with scalar-prefetched index maps instead of materializing the
+        # gathered stream (interpret-mode on CPU); same GN datapath, tiled.
+        from repro.kernels.gn_paged_attention.ops import gn_paged_attention
+
+        interp = jax.devices()[0].platform != "tpu"
+        out = gn_paged_attention(
+            q.reshape(b, cfg.n_heads, cfg.head_dim),
+            flat_k.reshape(nb, bs, kv, dh),
+            flat_v.reshape(nb, bs, kv, dh),
+            tables,
+            rows[:, 0] + 1,
+            interpret=interp,
+        ).reshape(b, 1, cfg.q_features)
+        out = jnp.einsum("bsf,fd->bsd", out.astype(dt), p["wo"].astype(dt))
+        return out, (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape))
+
+    # gather each slot's logical KV stream back out of the arena (post-write,
+    # so the chunk's own keys are already in place — no side concat needed)
+    k_at = flat_k.reshape(nb, bs, kv, dh)[tables].reshape(b, -1, kv, dh)
+    v_at = flat_v.reshape(nb, bs, kv, dh)[tables].reshape(b, -1, kv, dh)
+    t = k_at.shape[1]  # max_bt * bs >= max_seq, tail masked below
+
+    valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]  # (N, C, T)
+    mask = valid[:, None, None]  # broadcast over (kv, group)
+
+    group = cfg.n_heads // kv
+    qg = q.reshape(b, c_len, kv, group, cfg.head_dim)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_at) * (cfg.head_dim**-0.5)
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    from repro.core import get_softmax
+
+    pmat = get_softmax(cfg.softmax_impl)(scores).astype(v_at.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", pmat, v_at).reshape(b, c_len, cfg.q_features)
+    out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+    return out, (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape))
+
+
+def paged_write_indices(rows, n_valid, tables, block_size: int, num_blocks: int):
+    """Flattened arena destinations for a (N, C) grid of absolute positions:
+    physical = table[row // bs] * bs + row % bs, with lanes >= n_valid sent
+    out of bounds (num_blocks * bs) so `.at[].set(mode='drop')` discards
+    them.  Shared by the dense and MLA paged writers."""
+    n, c_len = rows.shape
+    log_blk = rows // block_size
+    phys = jnp.take_along_axis(tables, log_blk, axis=1)  # (N, C)
+    dest = phys * block_size + rows % block_size
+    lane_ok = jnp.arange(c_len)[None, :] < n_valid[:, None]
+    return jnp.where(lane_ok, dest, num_blocks * block_size).reshape(-1)
+
+
 def attn_decode_step(cfg: ModelConfig, p: dict, cache: dict, x, pos):
     """One-token decode.  x: (B,1,D); pos: scalar int32 (current position).
 

@@ -174,6 +174,37 @@ def mla_decode_chunk(cfg: ModelConfig, p: dict, cache: dict, x, pos, n_valid):
     return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 
+def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
+                    positions, n_valid, tables):
+    """Block-paged chunked append-decode over the latent cache, batched over
+    slots (see attention.paged ``attn_paged_chunk`` for the table/guard
+    contract).  x: (N, C, D); positions/n_valid: (N,); tables: (N, max_bt);
+    arena_ckv: (num_blocks, block_size, kv_lora_rank); arena_krope:
+    (num_blocks, block_size, qk_rope_head_dim).  MLA's compressed latent is
+    what makes paging cheap here: a block holds block_size * (rank + rope)
+    scalars instead of full per-head KV.  Returns (out, (new arenas))."""
+    from repro.models.attention import paged_write_indices
+
+    b, c_len = x.shape[:2]
+    nb, bs = arena_ckv.shape[:2]
+    offs = jnp.arange(c_len)
+    rows = positions[:, None] + offs[None, :]
+    q_nope, q_rope, c_new, kr_new = _project(cfg, p, x, rows)
+
+    dest = paged_write_indices(rows, n_valid, tables, bs, nb)
+    flat_c = arena_ckv.reshape(nb * bs, -1)
+    flat_r = arena_krope.reshape(nb * bs, -1)
+    flat_c = flat_c.at[dest].set(c_new.reshape(b * c_len, -1).astype(flat_c.dtype), mode="drop")
+    flat_r = flat_r.at[dest].set(kr_new.reshape(b * c_len, -1).astype(flat_r.dtype), mode="drop")
+
+    c_kv = flat_c.reshape(nb, bs, -1)[tables].reshape(b, -1, flat_c.shape[-1])
+    k_rope = flat_r.reshape(nb, bs, -1)[tables].reshape(b, -1, flat_r.shape[-1])
+    t = c_kv.shape[1]
+    mask = (jnp.arange(t)[None, None, :] <= rows[:, :, None])[:, None]  # (N,1,C,T)
+    out = _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)
+    return out, (flat_c.reshape(arena_ckv.shape), flat_r.reshape(arena_krope.shape))
+
+
 def mla_decode_step(cfg: ModelConfig, p: dict, cache: dict, x, pos):
     b = x.shape[0]
     posv = jnp.full((b, 1), pos, jnp.int32)

@@ -634,6 +634,172 @@ class Model:
             cache, tokens, positions, n_valid
         )
 
+    # ------------------------------------------------- block-paged cache ---
+    @property
+    def supports_paging(self) -> bool:
+        """Block-granular KV paging applies to the families whose per-layer
+        cache is a full-attention KV (dense/moe/encdec/vlm) or MLA latent
+        stream: those grow with the sequence, so HBM scales with worst-case
+        length under slab pooling.  SSM/hybrid carries are O(1) state and
+        sliding-window configs keep their ring buffer — nothing to page."""
+        return self.cfg.sliding_window == 0 and self.cfg.family not in ("ssm", "hybrid")
+
+    def paged_cache_specs(self, num_slots: int, num_blocks: int,
+                          block_size: int, max_seq: int):
+        """Cache specs with the ``layers`` leaves re-laid as shared block
+        arenas: the (slot, max_seq) dims of every per-layer KV/latent leaf
+        become (num_blocks, block_size), indexed through per-slot block
+        tables instead of a batch dim.  Non-sequence leaves (encdec cross KV,
+        vlm patches) keep their slot-batched layout."""
+        if not self.supports_paging:
+            raise ValueError(f"family {self.cfg.family!r} (sliding_window="
+                             f"{self.cfg.sliding_window}) has no pageable KV")
+        specs = self.cache_specs(num_slots, max_seq)
+
+        def repage(s):
+            # every 'layers' leaf here is (L, slot, kv_seq, ...): see
+            # cache_logical_axes for the dense/MLA families
+            return jax.ShapeDtypeStruct(
+                (s.shape[0], num_blocks, block_size, *s.shape[3:]), s.dtype
+            )
+
+        return {**specs, "layers": jax.tree.map(repage, specs["layers"])}
+
+    def init_paged_cache(self, num_slots: int, num_blocks: int,
+                         block_size: int, max_seq: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.paged_cache_specs(num_slots, num_blocks, block_size, max_seq),
+        )
+
+    def insert_cache_slot_extras(self, pool_cache, request_cache, slot):
+        """Slot-insert for the non-paged leaves of a paged pool cache (encdec
+        cross KV, vlm patches).  The block arenas under ``layers`` have no
+        slot dim — prompts stream into them through the block table — so
+        admission only pages the per-request side inputs in."""
+        axes = {k: v for k, v in self.cache_batch_axes().items() if k != "layers"}
+
+        def upd(dst, src, ax):
+            starts = tuple(slot if i == ax else 0 for i in range(dst.ndim))
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), starts)
+
+        extras = {k: pool_cache[k] for k in axes}
+        request = {k: request_cache[k] for k in axes}
+        return {**pool_cache, **jax.tree.map(upd, extras, request, axes)}
+
+    def fused_step_slots_paged(self, params, cache, tokens, positions, n_valid,
+                               tables):
+        """Block-paged counterpart of ``fused_step_slots``: every slot
+        processes its own C-token chunk at its own write offset, but KV lives
+        in shared block arenas addressed through per-slot block tables
+        instead of per-slot max_seq slabs.  tokens: (N, C) int32;
+        positions/n_valid: (N,) int32; tables: (N, max_bt) int32 — all
+        traced, so one compilation covers every phase/length/table mix.
+
+        Where the slab path vmaps the single-sequence chunk step over the
+        cache's slot axis, the arenas are *shared* across slots (that is the
+        memory win), so this path runs the layer stack batched: projections,
+        norms and MLPs are row-independent, and the paged attention read
+        gathers each slot's logical stream through its table.  n_valid=0
+        parks a lane completely (no writes — an inactive slot owns no
+        blocks).  Returns (logits (N, 1, V) — each slot's next-token row
+        n_valid-1 — and the new cache)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed"]["tok"].astype(dt)[tokens]  # (N, C, D)
+        x = shard(x, "batch", None, "embed_act")
+
+        if cfg.family == "vlm":
+            return self._vlm_paged(params, cache, x, positions, n_valid, tables)
+        if cfg.family == "encdec":
+            return self._encdec_paged(params, cache, x, positions, n_valid, tables)
+
+        def body(x, scanned):
+            lp, lcache = scanned
+            h = apply_norm(cfg, lp["ln1"], x)
+            if cfg.mla is not None:
+                y, (nck, nkr) = mla_mod.mla_paged_chunk(
+                    cfg, lp["mixer"], lcache["c_kv"], lcache["k_rope"], h,
+                    positions, n_valid, tables)
+                nc = {"c_kv": nck, "k_rope": nkr}
+            else:
+                y, (nk, nv) = attn.attn_paged_chunk(
+                    cfg, lp["mixer"], lcache["k"], lcache["v"], h,
+                    positions, n_valid, tables)
+                nc = {"k": nk, "v": nv}
+            x = x + y
+            if "mlp" in lp:
+                h2 = apply_norm(cfg, lp["ln2"], x)
+                y = (
+                    moe_mod.apply_moe(cfg, lp["mlp"], h2)[0]
+                    if cfg.moe
+                    else apply_mlp(cfg, lp["mlp"], h2)
+                )
+                x = x + y
+            return x, nc
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        return self._paged_head(params, x, n_valid), {**cache, "layers": new_layers}
+
+    def _paged_head(self, params, x, n_valid):
+        """Next-token logits per slot: gather row n_valid-1 (clamped for
+        parked lanes), then project only that row — per-row matmuls make the
+        gather bit-exact vs slicing the full projection."""
+        n = x.shape[0]
+        idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
+        xr = jnp.take_along_axis(x, jnp.broadcast_to(idx, (n, 1, x.shape[-1])), axis=1)
+        return _lm_head(self.cfg, params, xr)
+
+    def _encdec_paged(self, params, cache, x, positions, n_valid, tables):
+        cfg = self.cfg
+
+        def body(x, scanned):
+            lp, lcache, xk, xv = scanned
+            h = apply_norm(cfg, lp["ln1"], x)
+            y, (nk, nv) = attn.attn_paged_chunk(
+                cfg, lp["mixer"], lcache["k"], lcache["v"], h,
+                positions, n_valid, tables)
+            x = x + y
+            hx = apply_norm(cfg, lp["ln_x"], x)
+            x = x + _cross_attend_cached(cfg, lp["xattn"], hx, xk, xv)
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + apply_mlp(cfg, lp["mlp"], h2)
+            return x, {"k": nk, "v": nv}
+
+        x, new_layers = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"], cache["cross"]["k"], cache["cross"]["v"])
+        )
+        return self._paged_head(params, x, n_valid), {**cache, "layers": new_layers}
+
+    def _vlm_paged(self, params, cache, x, positions, n_valid, tables):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.cross_attn_every
+        layers = self._group_tree(params["layers"], g)
+        lcache = self._group_tree(cache["layers"], g)
+        patches = cache["patches"]
+
+        def group_body(x, scanned):
+            gp, xp, gc = scanned
+            x = self._xattn_block(xp, x, patches)
+
+            def inner(x2, s2):
+                lp, lc = s2
+                h = apply_norm(cfg, lp["ln1"], x2)
+                y, (nk, nv) = attn.attn_paged_chunk(
+                    cfg, lp["mixer"], lc["k"], lc["v"], h,
+                    positions, n_valid, tables)
+                x2 = x2 + y
+                h2 = apply_norm(cfg, lp["ln2"], x2)
+                x2 = x2 + apply_mlp(cfg, lp["mlp"], h2)
+                return x2, {"k": nk, "v": nv}
+
+            x, ngc = jax.lax.scan(inner, x, (gp, gc))
+            return x, ngc
+
+        x, nlc = jax.lax.scan(group_body, x, (layers, params["xattn_layers"], lcache))
+        nlc = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nlc)
+        return self._paged_head(params, x, n_valid), {**cache, "layers": nlc}
+
     # ----------------------------------------------------------- prefill ---
     def prefill(self, params, batch: dict, max_seq: int | None = None):
         """Prompt pass.  Returns (full-seq logits, decode-ready cache)."""

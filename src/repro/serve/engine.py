@@ -9,23 +9,32 @@ Two paths share the per-family caches from ``models/transformer.py``:
   (O(n) — the old per-token ``jnp.concatenate`` re-copied the whole buffer
   every step).
 
-* ``ContinuousEngine`` — continuous batching over a ``SlotKVPool`` with
-  chunked prefill fused into the per-tick step.  Admission pages an empty
-  slot in; the fused step (jitted ONCE over the fixed (num_slots, chunk)
-  token budget) then drains the prompt chunk-by-chunk through otherwise-
-  idle lanes while other slots keep decoding.  Per-slot positions, valid
-  counts, phases, temperatures and the active mask are all traced arrays,
-  so requests joining/leaving/prefilling never trigger recompilation —
-  and there is no per-prompt-length prefill jit at all (prompts are
-  bucketed to the chunk grid at intake, see serve/scheduler.pad_to_grid).
+* ``ContinuousEngine`` — continuous batching with chunked prefill fused
+  into the per-tick step.  Admission pages an empty slot in; the fused step
+  (jitted ONCE over the fixed (num_slots, chunk) token budget) then drains
+  the prompt chunk-by-chunk through otherwise-idle lanes while other slots
+  keep decoding.  Per-slot positions, valid counts, phases, temperatures,
+  the active mask — and, under paging, the block tables — are all traced
+  arrays, so requests joining/leaving/prefilling never trigger
+  recompilation, and there is no per-prompt-length prefill jit at all
+  (prompts are bucketed to the chunk grid at intake, see
+  serve/scheduler.pad_to_grid).
 
-Layering: scheduler (admission + chunk-grid bucketing) -> kv_cache (slot
-residency, offset-ranged positions) -> engine (this file: the fused step,
-sampling, phase state machine, stop conditions, metrics).
+  KV residency is block-granular wherever the family's cache is pageable
+  (``BlockPagedKVPool``: dense/moe/encdec/vlm full-attention KV, MLA
+  latents — HBM scales with live tokens, admission gates on free blocks);
+  SSM/hybrid carries and sliding-window rings keep the slot-monolithic
+  ``SlotKVPool``.
+
+Layering: scheduler (admission + chunk-grid bucketing) -> kv_cache (slot/
+block residency, block tables, offset-ranged positions) -> engine (this
+file: the fused step, sampling, phase state machine, stop conditions,
+metrics).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional, Sequence
 
@@ -34,8 +43,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
-from repro.serve.kv_cache import SlotKVPool
+from repro.serve.kv_cache import BlockPagedKVPool, SlotKVPool
 from repro.serve.scheduler import Completion, FCFSScheduler, Request, pad_to_grid
+
+
+class CountingJit:
+    """``jax.jit`` plus an explicit compilation counter.
+
+    The wrapped python function body runs exactly once per trace — i.e. once
+    per compilation — so ``compilations`` is always an int.  (The previous
+    probe poked jax's private ``_cache_size`` and silently degraded to
+    ``None`` on versions without it, writing nulls into ``metrics()`` /
+    BENCH_serve.json and blinding the bench's compile-count trajectory.)
+    """
+
+    def __init__(self, fn, **jit_kwargs):
+        self._count = 0
+
+        @functools.wraps(fn)
+        def counted(*args, **kwargs):
+            self._count += 1
+            return fn(*args, **kwargs)
+
+        self._jitted = jax.jit(counted, **jit_kwargs)
+
+    def __call__(self, *args, **kwargs):
+        return self._jitted(*args, **kwargs)
+
+    @property
+    def compilations(self) -> int:
+        return self._count
 
 
 @dataclasses.dataclass
@@ -170,7 +207,7 @@ class ContinuousEngine:
     def __init__(self, model: Model, params, num_slots: int, max_seq: int,
                  cfg: ServeConfig = ServeConfig(),
                  scheduler: Optional[FCFSScheduler] = None,
-                 chunk: int = 8):
+                 chunk: int = 8, block_size: int = 0, num_blocks: int = 0):
         self.model, self.params, self.cfg = model, params, cfg
         self.num_slots, self.max_seq = int(num_slots), int(max_seq)
         self.chunk = int(chunk)
@@ -181,15 +218,40 @@ class ContinuousEngine:
                 f"chunk {chunk} must be in [1, {limit}] "
                 "(cache ring capacity bounds the per-tick chunk)"
             )
-        self.pool = SlotKVPool(model, num_slots, max_seq)
+        # Block-paged KV wherever the family's cache is pageable (dense/moe/
+        # encdec/vlm full-attention KV, MLA latents): HBM scales with live
+        # tokens, admission gates on free blocks.  SSM/hybrid carries and
+        # sliding-window rings keep the slot-monolithic pool.
+        self.paged = model.supports_paging
+        if self.paged:
+            self.pool = BlockPagedKVPool(
+                model, num_slots, max_seq,
+                block_size=block_size or self.chunk, num_blocks=num_blocks,
+            )
+        else:
+            if block_size or num_blocks:
+                raise ValueError(
+                    f"family {model.cfg.family!r} has no pageable KV; "
+                    "block_size/num_blocks only apply to paged pools"
+                )
+            self.pool = SlotKVPool(model, num_slots, max_seq)
 
         # Donating the tick-carried state (cache tree, held logits,
         # positions, key) lets XLA update the cache in place instead of
         # copying it every tick (~20% off a smoke-scale decode tick); the
         # engine immediately rebinds each donated input to the returned
-        # value, so no stale reference survives.
-        self._decode = jax.jit(self._decode_sample, donate_argnums=(1, 2, 3, 6))
-        self._fused = jax.jit(self._fused_step, donate_argnums=(1, 2, 4, 9))
+        # value, so no stale reference survives.  Block tables are NOT
+        # donated — the host mirror stays authoritative.
+        if self.paged:
+            self._decode = CountingJit(self._decode_sample_paged,
+                                       donate_argnums=(1, 2, 3, 6))
+            self._fused = CountingJit(self._fused_step_paged,
+                                      donate_argnums=(1, 2, 4, 9))
+        else:
+            self._decode = CountingJit(self._decode_sample,
+                                       donate_argnums=(1, 2, 3, 6))
+            self._fused = CountingJit(self._fused_step,
+                                      donate_argnums=(1, 2, 4, 9))
         # Per-prompt-length prefill jits.  Chunked prefill leaves this empty
         # by construction; any future fallback that traces a prompt-length-
         # dependent prefill MUST register it here so the metric (and the
@@ -225,6 +287,9 @@ class ContinuousEngine:
         self._active_dev = jnp.zeros(self.num_slots, bool)
         self._temps_dev = jnp.zeros(self.num_slots, jnp.float32)
         self._lanes_dirty = True
+        if self.paged:
+            self._tables_dev = jnp.asarray(self.pool.tables)
+            self.pool.tables_dirty = False
         self._key = jax.random.PRNGKey(self.cfg.seed)
         self.step_count = 0
         self.completions: list[Completion] = []
@@ -288,6 +353,47 @@ class ContinuousEngine:
         new_positions = positions + jnp.where(active, nv, 0).astype(positions.dtype)
         return dec, new_last, ncache, new_positions, key
 
+    # ------------------------------------------------- paged jitted steps --
+    # Same tick contract as the slab steps, but the cache is the shared
+    # block-arena tree and every step carries the (traced) block tables.
+    # Inactive lanes get n_valid=0 — unlike a slab, a parked lane owns no
+    # blocks, so its writes must be *dropped*, not merely aimed at a
+    # don't-care slab row.
+
+    def _decode_sample_paged(self, params, cache, last_logits, positions,
+                             active, temps, key, tables):
+        nxt, key = self._sample_next(
+            last_logits, active, jnp.zeros_like(active), temps, key
+        )
+        pos = jnp.where(active, positions, 0)  # clamp dont-care lanes in range
+        nv = jnp.where(active, 1, 0).astype(jnp.int32)
+        logits, ncache = self.model.fused_step_slots_paged(
+            params, cache, nxt[:, None], pos, nv, tables
+        )
+        new_last = jnp.where(
+            active[:, None], logits[:, 0].astype(jnp.float32), last_logits
+        )
+        new_positions = positions + nv.astype(positions.dtype)
+        return nxt, new_last, ncache, new_positions, key
+
+    def _fused_step_paged(self, params, cache, last_logits, chunk_tokens,
+                          positions, n_valid, is_prefill, active, temps, key,
+                          tables):
+        dec, key = self._sample_next(last_logits, active, is_prefill, temps, key)
+        lane0 = jnp.zeros_like(chunk_tokens).at[:, 0].set(dec)
+        tokens = jnp.where(is_prefill[:, None], chunk_tokens, lane0)
+        nv = jnp.where(active & is_prefill, n_valid, 1)
+        nv = jnp.where(active, nv, 0).astype(jnp.int32)
+        pos = jnp.where(active, positions, 0)
+        logits, ncache = self.model.fused_step_slots_paged(
+            params, cache, tokens, pos, nv, tables
+        )
+        new_last = jnp.where(
+            active[:, None], logits[:, 0].astype(jnp.float32), last_logits
+        )
+        new_positions = positions + jnp.where(active, nv, 0).astype(positions.dtype)
+        return dec, new_last, ncache, new_positions, key
+
     # ------------------------------------------------------------ admission --
     def submit(self, req: Request) -> int:
         return self.scheduler.submit(req)
@@ -299,15 +405,29 @@ class ContinuousEngine:
         length, and there is no per-prompt-length prefill compilation."""
         admitted = []
         while self.pool.num_free:
-            req = self.scheduler.pop_ready(self.step_count)
-            if req is None:
+            head = self.scheduler.peek_ready(self.step_count)
+            if head is None:
                 break
-            if req.prompt_len + req.max_new_tokens > self.max_seq:
+            footprint = head.prompt_len + head.max_new_tokens
+            if footprint > self.max_seq:
                 raise ValueError(
-                    f"request {req.id}: prompt {req.prompt_len} + "
-                    f"{req.max_new_tokens} new tokens exceeds max_seq {self.max_seq}"
+                    f"request {head.id}: prompt {head.prompt_len} + "
+                    f"{head.max_new_tokens} new tokens exceeds max_seq {self.max_seq}"
                 )
-            slot = self.pool.allocate()
+            if self.paged:
+                if self.pool.blocks_for(footprint) > self.pool.num_blocks:
+                    raise ValueError(
+                        f"request {head.id}: footprint {footprint} tokens needs "
+                        f"{self.pool.blocks_for(footprint)} blocks, arena has "
+                        f"{self.pool.num_blocks} — unservable at any occupancy"
+                    )
+                if not self.pool.can_reserve(footprint):
+                    break  # admit on free *blocks*: FCFS head waits for recycling
+            req = self.scheduler.pop_ready(self.step_count)
+            slot = (
+                self.pool.allocate(reserve_tokens=footprint)
+                if self.paged else self.pool.allocate()
+            )
             fresh = self._fresh_cache
             if self._encode_cross is not None:
                 frames = jnp.asarray(req.extras["frames"])[None]
@@ -374,13 +494,24 @@ class ContinuousEngine:
             self._lanes_dirty = False
 
         takes: dict[int, int] = {}
+        for s in prefills:
+            st = self._slots[s]
+            takes[s] = min(self.chunk, st.req.prompt_len - st.written)
+        if self.paged:
+            # allocate blocks for the positions this tick will write, then
+            # refresh the device table mirror only if residency grew
+            for s in live:
+                self.pool.ensure(s, int(self.pool.positions[s]) + takes.get(s, 1))
+            if self.pool.tables_dirty:
+                self._tables_dev = jnp.asarray(self.pool.tables)
+                self.pool.tables_dirty = False
+        paged_args = (self._tables_dev,) if self.paged else ()
         if prefills:
             chunk_toks = np.zeros((self.num_slots, self.chunk), np.int32)
             n_valid = np.ones(self.num_slots, np.int32)
             is_pref = np.zeros(self.num_slots, bool)
             for s in prefills:
                 st = self._slots[s]
-                takes[s] = min(self.chunk, st.req.prompt_len - st.written)
                 chunk_toks[s] = st.padded[st.written : st.written + self.chunk]
                 n_valid[s] = takes[s]
                 is_pref[s] = True
@@ -388,7 +519,7 @@ class ContinuousEngine:
                 self._fused(
                     self.params, self.pool.cache, self._last_logits, chunk_toks,
                     self._pos_dev, n_valid, is_pref, self._active_dev,
-                    self._temps_dev, self._key,
+                    self._temps_dev, self._key, *paged_args,
                 )
             )
             self._fused_ticks += 1
@@ -397,6 +528,7 @@ class ContinuousEngine:
                 self._decode(
                     self.params, self.pool.cache, self._last_logits,
                     self._pos_dev, self._active_dev, self._temps_dev, self._key,
+                    *paged_args,
                 )
             )
         toks = np.asarray(nxt)
@@ -447,7 +579,7 @@ class ContinuousEngine:
     def metrics(self) -> dict:
         util = self._active_steps / max(1, self._decode_steps * self.num_slots)
         pref = self._prefill_lane_steps / max(1, self._active_steps)
-        return {
+        out = {
             "decode_steps": self._decode_steps,
             "generated_tokens": self._generated,
             "mean_slot_utilization": util,
@@ -456,18 +588,27 @@ class ContinuousEngine:
             "completions": len(self.completions),
             "chunk": self.chunk,
             "intake_padding": getattr(self.scheduler, "intake_padding", 0),
-            "decode_compilations": _jit_compilations(self._decode),
-            "fused_step_compilations": _jit_compilations(self._fused),
+            # CountingJit: always ints (one trace == one compilation)
+            "decode_compilations": self._decode.compilations,
+            "fused_step_compilations": self._fused.compilations,
             # chunked prefill rides the fused step: _length_prefills stays
-            # empty unless a fallback reintroduces per-length tracing.
+            # empty unless a fallback reintroduces per-length tracing.  The
+            # attribute access is deliberately strict: registering a plain
+            # jax.jit here would silently count 0 — wrap it in CountingJit.
             "prefill_compilations": sum(
-                _jit_compilations(f) or 0 for f in self._length_prefills.values()
+                f.compilations for f in self._length_prefills.values()
             ),
+            "kv_paged": self.paged,
+            "kv_hbm_bytes": self.pool.hbm_bytes(),
         }
-
-
-def _jit_compilations(fn) -> Optional[int]:
-    """Compilation count of a jitted callable, or None if jax's (private)
-    cache-size probe is unavailable on this version."""
-    probe = getattr(fn, "_cache_size", None)
-    return probe() if callable(probe) else None
+        if self.paged:
+            out.update(
+                block_size=self.pool.block_size,
+                num_blocks=self.pool.num_blocks,
+                peak_blocks_in_use=self.pool.peak_blocks_in_use,
+                peak_blocks_reserved=self.pool.peak_blocks_reserved,
+                block_utilization=(
+                    self.pool.peak_blocks_in_use / max(1, self.pool.num_blocks)
+                ),
+            )
+        return out

@@ -1,15 +1,27 @@
-"""Slot-paged KV/state cache pool for continuous batching.
+"""KV/state cache pools for continuous batching.
 
-One device-resident cache tree sized for ``num_slots`` sequences; the batch
-dim of every leaf is reinterpreted as a *slot* dim.  A request is prefetched
-into a free slot (single ``dynamic_update_slice`` per leaf, slot index
-traced so one compilation covers all slots), decoded in place by the
-engine's masked decode, and its slot is recycled the step it finishes.
+Two residency granularities:
 
-The per-family cache layouts (dense k/v, MLA latent, SSM carries, hybrid
-shared-attention kv, encdec cross kv, vlm patches) are all handled
-generically through ``Model.cache_batch_axes`` — this file never looks
-inside the tree.
+* ``SlotKVPool`` — slot-monolithic: one device cache tree sized for
+  ``num_slots`` sequences, every leaf's batch dim a *slot* dim, each slot a
+  ``max_seq``-long slab.  Still the pool for the families without pageable
+  KV (SSM/hybrid O(1) carries, sliding-window rings) and the HBM baseline
+  the bench compares against.
+
+* ``BlockPagedKVPool`` — block-granular: the per-layer KV/latent leaves
+  become a fixed arena of ``num_blocks x block_size`` blocks shared by all
+  slots, plus a per-slot block *table* (logical block -> physical block).
+  Blocks are allocated on demand as a sequence grows and recycled the tick
+  its request finishes, so resident HBM scales with live tokens instead of
+  ``num_slots x max_seq`` — the long-tail-workload win.  Admission gates on
+  free *blocks* (a whole-request reservation, so a request can never strand
+  mid-decode with the arena full), not free slabs.
+
+Both pools track per-slot absolute positions host-side; free lists are FIFO
+so slot/block reuse order is deterministic (replay identity leans on it).
+The per-family cache layouts are handled generically through
+``Model.cache_batch_axes`` / ``Model.paged_cache_specs`` — this file never
+looks inside the tree.
 """
 from __future__ import annotations
 
@@ -17,6 +29,14 @@ from collections import deque
 
 import jax
 import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    """Device bytes of a cache tree (leaf sizes x itemsize)."""
+    return sum(
+        int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(tree)
+    )
 
 
 class SlotKVPool:
@@ -42,10 +62,21 @@ class SlotKVPool:
     # ------------------------------------------------------------ residency --
     def reset(self) -> None:
         """Free everything and restore the canonical slot order, so a reset
-        engine assigns slots exactly like a fresh one (replay determinism)."""
+        engine assigns slots exactly like a fresh one (replay determinism).
+
+        Stale KV *contents* stay resident by design: admission always pages
+        a whole fresh (zeroed) request cache over the slot slab before any
+        read, so no stale value is reachable.  (The block-paged pool below
+        cannot rely on whole-slab overwrites — recycled blocks are guarded
+        by the attention mask instead; see ``attn_paged_chunk``.)"""
         self.positions[:] = 0
         self._free = deque(range(self.num_slots))
         self._used.clear()
+
+    def hbm_bytes(self) -> int:
+        """Resident device bytes of the pool cache (the slab baseline the
+        paged pool's ``kv_hbm_bytes`` is compared against)."""
+        return tree_bytes(self.cache)
 
     @property
     def num_free(self) -> int:
@@ -97,3 +128,184 @@ class SlotKVPool:
                     f"slot {slot}: position {new} exceeds max_seq {self.max_seq}"
                 )
             self.positions[slot] = new
+
+
+class BlockPagedKVPool:
+    """Block-granular KV pool over ``model.init_paged_cache``.
+
+    Device state: the shared block arenas (per-layer KV/latent leaves) plus
+    the slot-batched non-paged leaves (encdec cross KV, vlm patches).  Host
+    state: per-slot positions, per-slot block tables (np mirror, pushed to
+    device by the engine when ``tables_dirty``), FIFO free lists for slots
+    and blocks, and per-slot whole-request block *reservations*.
+
+    Reservation contract: ``allocate(reserve_tokens=n)`` admits a request
+    only after ``can_reserve(n)`` said the arena can cover its worst-case
+    footprint (prompt + full decode budget).  Physical blocks are still
+    handed out lazily by ``ensure`` as positions grow — the reservation is
+    pure accounting — so admission can never deadlock mid-decode, while
+    short-finishing requests (stop tokens) simply return unused headroom.
+
+    Recycled blocks are NOT zeroed on free: every read is guarded by the
+    causal mask, and the GN softmax maps masked scores to exactly-zero
+    numerators, so stale contents are unreachable (the sampled-reset replay
+    test in tests/test_serve_paged.py pins this).
+    """
+
+    def __init__(self, model, num_slots: int, max_seq: int,
+                 block_size: int, num_blocks: int = 0):
+        self.model = model
+        self.num_slots = int(num_slots)
+        self.max_seq = int(max_seq)
+        self.block_size = int(block_size)
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.max_blocks_per_slot = -(-self.max_seq // self.block_size)
+        # 0 = slab-equivalent capacity (never admission-blocks); benches pass
+        # a tight count to measure the live-token footprint
+        self.num_blocks = int(num_blocks) or self.num_slots * self.max_blocks_per_slot
+        self.cache = model.init_paged_cache(
+            self.num_slots, self.num_blocks, self.block_size, self.max_seq
+        )
+        self.positions = np.zeros(self.num_slots, np.int32)
+        # physical ids; entries past a slot's allocated prefix are stale but
+        # unreachable (masked) — 0-filled so device gathers stay in range
+        self.tables = np.zeros((self.num_slots, self.max_blocks_per_slot), np.int32)
+        self.tables_dirty = True
+        self._insert = jax.jit(model.insert_cache_slot_extras, donate_argnums=(0,))
+        self.reset()
+
+    # ------------------------------------------------------------ residency --
+    def reset(self) -> None:
+        """Free everything and restore canonical slot AND block order, so a
+        reset engine replays a workload with identical slot assignment and
+        block-table contents (bit-identical replay, sampled runs included —
+        stale arena contents are mask-guarded, not zeroed)."""
+        self.positions[:] = 0
+        self.tables[:] = 0
+        self.tables_dirty = True
+        self._free_slots: deque[int] = deque(range(self.num_slots))
+        self._free_blocks: deque[int] = deque(range(self.num_blocks))
+        self._used: set[int] = set()
+        self._slot_blocks: dict[int, list[int]] = {}
+        self._reserved = np.zeros(self.num_slots, np.int32)  # blocks, whole-request
+        self.peak_blocks_in_use = 0
+        self.peak_blocks_reserved = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self._free_blocks)
+
+    @property
+    def blocks_reserved(self) -> int:
+        return int(self._reserved.sum())
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-int(tokens) // self.block_size)
+
+    def can_reserve(self, tokens: int) -> bool:
+        """True if the arena can cover a ``tokens``-long request on top of
+        every outstanding reservation (free blocks minus the lazily-unfilled
+        remainder of other slots' reservations)."""
+        unfilled = self.blocks_reserved - self.blocks_in_use
+        return len(self._free_blocks) - unfilled >= self.blocks_for(tokens)
+
+    def allocate(self, reserve_tokens: int = 0) -> int:
+        if not self._free_slots:
+            raise RuntimeError("BlockPagedKVPool exhausted: no free slot")
+        need = self.blocks_for(reserve_tokens)
+        if reserve_tokens and not self.can_reserve(reserve_tokens):
+            raise RuntimeError(
+                f"BlockPagedKVPool exhausted: {need} blocks wanted, "
+                f"{len(self._free_blocks)} free minus "
+                f"{self.blocks_reserved - self.blocks_in_use} reserved"
+            )
+        slot = self._free_slots.popleft()
+        self._used.add(slot)
+        self._slot_blocks[slot] = []
+        self._reserved[slot] = need
+        self.peak_blocks_reserved = max(self.peak_blocks_reserved, self.blocks_reserved)
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Recycle a slot and its blocks the tick its request finishes.
+        Blocks return to the FIFO free list in allocation order."""
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used.remove(slot)
+        self.positions[slot] = 0
+        for b in self._slot_blocks.pop(slot):
+            self._free_blocks.append(b)
+        self._reserved[slot] = 0
+        self._free_slots.append(slot)
+
+    # --------------------------------------------------------- block tables --
+    def ensure(self, slot: int, position: int) -> None:
+        """Grow ``slot``'s block table to cover positions [0, position).
+        Called by the engine before each tick for the positions that tick
+        will write; reservation accounting makes exhaustion here a bug, not
+        a load condition."""
+        if position > self.max_seq:
+            raise ValueError(f"position {position} exceeds max_seq {self.max_seq}")
+        blocks = self._slot_blocks[slot]
+        need = self.blocks_for(position)
+        if need > self._reserved[slot]:
+            # growth past the reservation would consume blocks other slots'
+            # admissions were promised — the strand-free guarantee rests on
+            # every slot staying inside its allocate(reserve_tokens=) budget
+            raise RuntimeError(
+                f"slot {slot}: {need} blocks exceed its reservation "
+                f"{int(self._reserved[slot])}; allocate(reserve_tokens=...) "
+                "must cover the full prompt + decode footprint"
+            )
+        while len(blocks) < need:
+            if not self._free_blocks:
+                raise RuntimeError(
+                    f"BlockPagedKVPool exhausted mid-sequence (slot {slot}): "
+                    "reservation accounting should have prevented this"
+                )
+            b = self._free_blocks.popleft()
+            self.tables[slot, len(blocks)] = b
+            blocks.append(b)
+            self.tables_dirty = True
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use, self.blocks_in_use)
+
+    # ------------------------------------------------------------- contents --
+    def insert(self, request_cache, slot: int, position: int) -> None:
+        """Page a request's *non-paged* leaves (cross KV, patches) into
+        ``slot``.  KV itself streams through the block table, so for plain
+        dense/MLA requests this is pure host bookkeeping."""
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        if position > self.max_seq:
+            raise ValueError(f"position {position} exceeds max_seq {self.max_seq}")
+        extras = {k: v for k, v in request_cache.items() if k != "layers"}
+        if extras:
+            self.cache = self._insert(self.cache, extras, slot)
+        self.positions[slot] = position
+        if position:
+            self.ensure(slot, position)
+
+    def advance(self, slots, by: int = 1) -> None:
+        """Advance slot positions (same contract as SlotKVPool.advance)."""
+        items = slots.items() if isinstance(slots, dict) else ((s, by) for s in slots)
+        for slot, n in items:
+            new = int(self.positions[slot]) + int(n)
+            if new > self.max_seq:
+                raise ValueError(
+                    f"slot {slot}: position {new} exceeds max_seq {self.max_seq}"
+                )
+            self.positions[slot] = new
+
+    # -------------------------------------------------------------- metrics --
+    def hbm_bytes(self) -> int:
+        """Resident device bytes: block arenas + non-paged leaves + tables."""
+        return tree_bytes(self.cache) + self.tables.nbytes

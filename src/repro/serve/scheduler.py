@@ -111,24 +111,43 @@ class FCFSScheduler:
         self._pad_tokens = 0  # total intake padding (bucketing overhead)
 
     def submit(self, req: Request) -> int:
+        """Enqueue a *copy* of ``req`` and return its id.
+
+        Submit is side-effect-free on the caller's object: id assignment and
+        chunk-grid bucketing land on the queued copy only.  (The old in-place
+        mutation meant re-submitting one workload list across the static
+        oracle, engine resets and bench reps carried hidden state — and a
+        stale ``padded_tokens`` from a different chunk grid was only caught
+        by the ``% chunk`` fallback in the engine's admission path.)
+        """
         if req.max_new_tokens < 1:
             raise ValueError(
                 f"request needs max_new_tokens >= 1, got {req.max_new_tokens} "
                 "(the engine always decodes at least one token per admission)"
             )
-        if req.id < 0:
-            req.id = self._next_id
-        self._next_id = max(self._next_id, req.id) + 1
+        rid = req.id if req.id >= 0 else self._next_id
+        self._next_id = max(self._next_id, rid) + 1
+        queued = dataclasses.replace(req, id=rid)
+        # never trust a padded_tokens stamped by some other scheduler's grid
+        queued.padded_tokens = (
+            pad_to_grid(queued.tokens, self.chunk_grid) if self.chunk_grid else None
+        )
         if self.chunk_grid:
-            req.padded_tokens = pad_to_grid(req.tokens, self.chunk_grid)
-            self._pad_tokens += int(req.padded_tokens.shape[0]) - req.prompt_len
-        self._queue.append(req)
-        return req.id
+            self._pad_tokens += int(queued.padded_tokens.shape[0]) - queued.prompt_len
+        self._queue.append(queued)
+        return rid
 
     @property
     def intake_padding(self) -> int:
         """Total pad tokens added by bucketing (<= (grid-1) per request)."""
         return self._pad_tokens
+
+    def peek_ready(self, step: int) -> Optional[Request]:
+        """Head of the queue if it has arrived by engine step ``step``,
+        without popping — admission checks resources (free blocks) first."""
+        if self._queue and self._queue[0].arrival_step <= step:
+            return self._queue[0]
+        return None
 
     def pop_ready(self, step: int) -> Optional[Request]:
         """Head of the queue if it has arrived by engine step ``step``."""

@@ -30,15 +30,25 @@ def staggered_requests(
     stagger: int = 2,
     seed: int = 7,
     mixed_new: bool = True,
+    tail_len: int = 0,
+    tail_every: int = 0,
 ) -> list[Request]:
     """``n_requests`` prompts over 3 mixed lengths (base/2, base, 3*base/2),
     arriving every ``stagger`` engine steps; max_new alternates between the
     full budget and half of it when ``mixed_new`` (so the static baseline
-    pays for stragglers that continuous batching retires early)."""
+    pays for stragglers that continuous batching retires early).
+
+    ``tail_len``/``tail_every`` graft a long tail onto the mix: every
+    ``tail_every``-th request (at phase tail_every-1) gets a ``tail_len``
+    prompt instead.  One long request forces a slab pool to size *every*
+    slot for it (num_slots x max_seq HBM); a block-paged pool only spends
+    blocks on the tail itself — the regime the paged-KV bench measures."""
     lens = [max(4, base_len // 2), base_len, base_len + base_len // 2]
     reqs = []
     for i in range(n_requests):
         plen = lens[i % len(lens)]
+        if tail_len and tail_every and i % tail_every == tail_every - 1:
+            plen = tail_len
         data = DataConfig(vocab=cfg.vocab, seq_len=plen, global_batch=1, seed=seed + i)
         tokens = np.asarray(batch_at(data, 0)["tokens"][0], np.int32)
         new = max(1, max_new_tokens if (not mixed_new or i % 2 == 0)

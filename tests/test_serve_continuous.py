@@ -118,7 +118,7 @@ def test_uniform_workload_matches_static(dense):
     for c in comps:
         assert np.array_equal(c.tokens, ref[c.request_id])
     m = engine.metrics()
-    assert m["decode_compilations"] in (1, None)
+    assert m["decode_compilations"] in (0, 1)
     assert m["mean_slot_utilization"] > 0.9  # everyone decodes in lockstep
 
 
@@ -136,7 +136,7 @@ def test_mixed_lengths_queueing_matches_static(dense):
     for c in comps:
         assert np.array_equal(c.tokens, ref[c.request_id]), f"req {c.request_id}"
         assert c.admit_step >= c.arrival_step
-    assert engine.metrics()["decode_compilations"] in (1, None)
+    assert engine.metrics()["decode_compilations"] == 1
     # FCFS: admission order == request id order
     admits = sorted(comps, key=lambda c: (c.admit_step, c.request_id))
     assert [c.request_id for c in admits] == list(range(6))
@@ -157,7 +157,7 @@ def test_ssm_family_continuous_matches_static():
     ref = static_reference(model, params, reqs, scfg)
     for c in comps:
         assert np.array_equal(c.tokens, ref[c.request_id])
-    assert engine.metrics()["decode_compilations"] in (1, None)
+    assert engine.metrics()["decode_compilations"] == 1
 
 
 def test_stop_token_finishes_early_and_frees_slot(dense):

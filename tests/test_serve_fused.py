@@ -55,8 +55,8 @@ def test_fused_step_compiles_once_across_prompt_length_mix():
     m = engine.metrics()
     # the whole point: one fused compilation regardless of the length mix,
     # and no per-prompt-length prefill jit at all
-    assert m["fused_step_compilations"] in (1, None)
-    assert m["decode_compilations"] in (1, None)
+    assert m["fused_step_compilations"] == 1
+    assert m["decode_compilations"] in (0, 1)
     assert m["prefill_compilations"] == 0
     assert m["fused_ticks"] > 0
     ref = static_reference(model, params, reqs, scfg)
@@ -105,7 +105,7 @@ def test_chunk_boundary_greedy_identity(arch):
     for c in comps:
         assert np.array_equal(c.tokens, ref[c.request_id]), f"req {c.request_id}"
     m = engine.metrics()
-    assert m["fused_step_compilations"] in (1, None)
+    assert m["fused_step_compilations"] == 1
     assert m["prefill_compilations"] == 0
 
 
@@ -124,11 +124,35 @@ def test_scheduler_buckets_at_submit_and_tracks_padding():
     sched = FCFSScheduler(chunk_grid=8)
     r1 = Request(tokens=np.arange(5, dtype=np.int32))   # +3 pad
     r2 = Request(tokens=np.arange(16, dtype=np.int32))  # aligned, +0
-    sched.submit(r1)
-    sched.submit(r2)
-    assert r1.padded_tokens.shape[0] == 8
-    assert r2.padded_tokens.shape[0] == 16
+    id1 = sched.submit(r1)
+    id2 = sched.submit(r2)
+    # submit is side-effect-free on the caller's objects: bucketing and id
+    # assignment land on the queued copies only (re-submitting one workload
+    # list across oracle runs / engine resets / bench reps stays clean)
+    assert r1.padded_tokens is None and r1.id == -1
+    assert r2.padded_tokens is None and r2.id == -1
+    q1, q2 = sched.pop_ready(0), sched.pop_ready(0)
+    assert (q1.id, q2.id) == (id1, id2) == (0, 1)
+    assert q1.padded_tokens.shape[0] == 8
+    assert q2.padded_tokens.shape[0] == 16
+    assert np.array_equal(q1.padded_tokens[:5], r1.tokens)
     assert sched.intake_padding == 3
+
+
+def test_scheduler_resubmit_does_not_carry_stale_grid_state():
+    # the same caller Request goes through two schedulers on different
+    # chunk grids; each queued copy is padded to ITS grid
+    req = Request(tokens=np.arange(5, dtype=np.int32))
+    a = FCFSScheduler(chunk_grid=8)
+    b = FCFSScheduler(chunk_grid=4)
+    a.submit(req)
+    b.submit(req)
+    c = FCFSScheduler(chunk_grid=3)
+    c.submit(req)
+    assert a.pop_ready(0).padded_tokens.shape[0] == 8   # 5 -> grid 8
+    assert b.pop_ready(0).padded_tokens.shape[0] == 8   # 5 -> grid 4
+    assert c.pop_ready(0).padded_tokens.shape[0] == 6   # 5 -> grid 3
+    assert req.padded_tokens is None
 
 
 def test_chunk_must_fit_cache():
