@@ -13,13 +13,15 @@ timed end-to-end on the identical request set.  Emits the BENCH_serve.json
 schema (written to experiments/results/) so future PRs can track the
 serving-throughput trajectory:
 
-  {"benchmark": "serve", "arch": ..., "workload": {... incl. "arch"},
+  {"benchmark": "serve", "arch": ..., "workload": {... incl. "arch",
+                "num_devices"},
    "static": {"wall_s", "cold_wall_s", "tokens_per_s", "batches"},
    "continuous": {"wall_s", "cold_wall_s", "tokens_per_s", "decode_steps",
                   "fused_ticks", "mean_slot_utilization",
                   "prefill_lane_fraction", "chunk", "intake_padding",
                   "decode_compilations", "fused_step_compilations",
                   "prefill_compilations", "kv_hbm_bytes",
+                  "num_devices", "per_device_slots", "shard_balance",
                   + paged: "num_blocks", "block_size", "peak_blocks_in_use",
                   "peak_blocks_reserved", "block_utilization"},
    "kv": {"paged", "slab_hbm_bytes", "kv_hbm_bytes",
@@ -29,8 +31,15 @@ serving-throughput trajectory:
    "history": [{"git_sha", "arch", "workload_hash", "timestamp", "speedup",
                 "cold_speedup", "tokens_per_s", "prefill_compilations",
                 "decode_compilations", "fused_step_compilations",
-                "kv_hbm_bytes", "num_blocks", "block_utilization",
+                "kv_hbm_bytes", "num_devices", "per_device_slots",
+                "shard_balance", "num_blocks", "block_utilization",
                 "equal_hbm_slots_gain"}, ...]}
+
+``--devices N`` serves from a slot pool sharded over N devices (slot-axis
+NamedSharding, least-loaded admission placement — see docs/serving.md
+§Device mesh); ``num_devices``/``per_device_slots``/``shard_balance`` track
+the scaling trajectory in history rows exactly like the warm/cold speedups.
+On CPU export XLA_FLAGS=--xla_force_host_platform_device_count=N first.
 
 The paged-KV measurement runs the workload twice on the continuous engine:
 once with a slab-equivalent arena (never admission-blocks) to learn the
@@ -67,7 +76,12 @@ import numpy as np
 from benchmarks.common import writeout
 from repro.configs.registry import get_config, list_archs, reduce_config
 from repro.models.transformer import make_model
-from repro.serve.engine import ContinuousEngine, ServeConfig, static_reference
+from repro.serve.engine import (
+    ContinuousEngine,
+    ServeConfig,
+    round_slots_to_devices,
+    static_reference,
+)
 from repro.serve.kv_cache import tree_bytes
 from repro.serve.workload import required_max_seq, staggered_requests
 
@@ -103,7 +117,8 @@ def _load_history() -> list:
 
 def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         max_new: int = 16, num_slots: int = 0, stagger: int = 1,
-        chunk: int = 8, reps: int = 10, tail_len: int = -1) -> dict:
+        chunk: int = 8, reps: int = 10, tail_len: int = -1,
+        devices: int = 1) -> dict:
     cfg = reduce_config(get_config(arch))
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -116,8 +131,10 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
                               max_new_tokens=max_new, stagger=stagger, seed=23,
                               tail_len=tail_len, tail_every=8 if tail_len else 0)
     # half the request count keeps the pool busy (~70% util) while static
-    # still pays per-group batch fragmentation — the measured sweet spot
-    num_slots = num_slots or max(2, n_requests // 2)
+    # still pays per-group batch fragmentation — the measured sweet spot;
+    # rounded up to a device multiple so the slot axis shards evenly
+    num_slots = round_slots_to_devices(num_slots or max(2, n_requests // 2),
+                                       devices)
     max_seq = required_max_seq(reqs)
     useful = sum(r.max_new_tokens for r in reqs)
     n_groups = len({(r.prompt_len, r.max_new_tokens) for r in reqs})
@@ -137,7 +154,8 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
     cold_static_s = time.time() - t0
     t0 = time.time()
     engine = ContinuousEngine(model, params, num_slots=num_slots,
-                              max_seq=max_seq, cfg=scfg, chunk=chunk)
+                              max_seq=max_seq, cfg=scfg, chunk=chunk,
+                              devices=devices)
     engine.run(reqs)
     cold_cont_s = time.time() - t0
 
@@ -150,10 +168,13 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
     per_slot_slab_bytes = tree_bytes(model.cache_specs(1, max_seq))
     kv = {"paged": engine.paged, "slab_hbm_bytes": num_slots * per_slot_slab_bytes}
     if engine.paged:
-        tight_blocks = engine.pool.peak_blocks_reserved
+        # size each device's shard for ITS reservation peak (== the global
+        # peak when devices=1), so the tight arena still serves the same
+        # workload under least-loaded placement imbalance
+        tight_blocks = int(engine.pool.peak_reserved_per_device.max()) * devices
         engine = ContinuousEngine(model, params, num_slots=num_slots,
                                   max_seq=max_seq, cfg=scfg, chunk=chunk,
-                                  num_blocks=tight_blocks)
+                                  num_blocks=tight_blocks, devices=devices)
         engine.run(reqs)  # warm the tight engine (and prove it serves)
         paged_hbm = engine.pool.hbm_bytes()
         slab_slots = paged_hbm // per_slot_slab_bytes
@@ -200,6 +221,9 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         "num_slots": num_slots,
         "chunk": chunk,
         "tail_len": tail_len,
+        # part of the workload identity: a 2-device run is a different
+        # trajectory than a 1-device run (same precedent as adding arch)
+        "num_devices": devices,
     }
     payload = {
         "benchmark": "serve",
@@ -225,6 +249,9 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
             "fused_step_compilations": m["fused_step_compilations"],
             "prefill_compilations": m["prefill_compilations"],
             "kv_hbm_bytes": m["kv_hbm_bytes"],
+            "num_devices": m["num_devices"],
+            "per_device_slots": m["per_device_slots"],
+            "shard_balance": m["shard_balance"],
             **({"num_blocks": m["num_blocks"],
                 "block_size": m["block_size"],
                 "peak_blocks_in_use": m["peak_blocks_in_use"],
@@ -251,6 +278,9 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         "decode_compilations": m["decode_compilations"],
         "fused_step_compilations": m["fused_step_compilations"],
         "kv_hbm_bytes": m["kv_hbm_bytes"],
+        "num_devices": m["num_devices"],
+        "per_device_slots": m["per_device_slots"],
+        "shard_balance": m["shard_balance"],
         # paged-only columns are omitted (not nulled) on slab archs, like
         # the payload's continuous section — nulls read as broken counters
         **({"num_blocks": m["num_blocks"],
@@ -272,9 +302,13 @@ def main():
     ap.add_argument("--chunk", type=int, default=8, help="prefill chunk size")
     ap.add_argument("--tail-len", type=int, default=-1,
                     help="long-tail prompt length (-1 = 8*base_len, 0 = off)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the slot pool over N devices (CPU: export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
     payload = run(args.arch, args.requests, args.base_len, args.new_tokens,
-                  args.num_slots, chunk=args.chunk, tail_len=args.tail_len)
+                  args.num_slots, chunk=args.chunk, tail_len=args.tail_len,
+                  devices=args.devices)
     print(json.dumps({k: v for k, v in payload.items() if k != "history"},
                      indent=2, default=float))
     s, c = payload["static"], payload["continuous"]
@@ -290,6 +324,10 @@ def main():
     print(f"compilations: fused={c['fused_step_compilations']} "
           f"decode={c['decode_compilations']} prefill={c['prefill_compilations']}"
           f"  (history: {len(payload['history'])} runs)")
+    if c["num_devices"] > 1:
+        print(f"sharded: {c['num_devices']} devices x {c['per_device_slots']} "
+              f"slots, admission balance {c['shard_balance']:.2f} "
+              "(1.0 = perfectly even)")
     kv = payload["kv"]
     if kv["paged"]:
         print(f"paged KV: {c['num_blocks']} blocks x {c['block_size']} tok "

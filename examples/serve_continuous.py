@@ -8,17 +8,35 @@ the admission/completion timeline so you can watch requests join and leave
 the running batch without any recompilation, then cross-checks greedy
 outputs against the static engine.
 
+``--devices N`` shards the slot pool over an N-device mesh (slot-axis
+NamedSharding, least-loaded admission — see docs/serving.md §Device mesh);
+the timeline then splits the slot marks per device (``|`` separators) and
+reports per-device occupancy and admission balance.  This is a CPU demo at
+reduced config, so the script forces N host-platform devices itself before
+jax initializes — no env var needed.
+
 Run:  PYTHONPATH=src python examples/serve_continuous.py [--arch internlm2-1.8b]
+      PYTHONPATH=src python examples/serve_continuous.py --devices 2
 """
 import argparse
 import time
+
+from repro.launch._host_devices import force_host_devices
+
+# must run before jax initializes its backend (reduced-config CPU demo)
+force_host_devices()
 
 import jax
 import numpy as np
 
 from repro.configs.registry import get_config, list_archs, reduce_config
 from repro.models.transformer import make_model
-from repro.serve.engine import ContinuousEngine, ServeConfig, static_reference
+from repro.serve.engine import (
+    ContinuousEngine,
+    ServeConfig,
+    round_slots_to_devices,
+    static_reference,
+)
 from repro.serve.workload import required_max_seq, staggered_requests
 
 
@@ -28,6 +46,8 @@ def main():
     ap.add_argument("--requests", type=int, default=9)
     ap.add_argument("--num-slots", type=int, default=3)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the slot pool over N (forced host) devices")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch))
@@ -35,28 +55,38 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     reqs = staggered_requests(cfg, n_requests=args.requests, base_len=16,
                               max_new_tokens=args.new_tokens, stagger=2, seed=3)
-    engine = ContinuousEngine(model, params, num_slots=args.num_slots,
-                              max_seq=required_max_seq(reqs), cfg=ServeConfig())
+    num_slots = round_slots_to_devices(args.num_slots, args.devices)
+    engine = ContinuousEngine(model, params, num_slots=num_slots,
+                              max_seq=required_max_seq(reqs), cfg=ServeConfig(),
+                              devices=args.devices)
     for r in reqs:
         engine.submit(r)
 
-    print(f"{args.requests} requests / {args.num_slots} slots "
+    print(f"{args.requests} requests / {num_slots} slots "
+          f"on {args.devices} device(s) "
           f"(prompt lens {sorted({r.prompt_len for r in reqs})}, "
           f"max_new {sorted({r.max_new_tokens for r in reqs})})\n")
     done = 0
+    pds = num_slots // args.devices
     t0 = time.time()
     while engine.step():
         newly = engine.completions[done:]
         done = len(engine.completions)
         live = sum(s is not None for s in engine._slots)
-        # P = prefilling a prompt chunk, D = decoding, . = idle slot
-        marks = "".join(
-            "." if s is None else ("P" if s.phase == "prefilling" else "D")
-            for s in engine._slots
+        # P = prefilling a prompt chunk, D = decoding, . = idle slot;
+        # '|' separates each device's slot range under a sharded pool
+        marks = "|".join(
+            "".join(
+                "." if s is None else ("P" if s.phase == "prefilling" else "D")
+                for s in engine._slots[d * pds : (d + 1) * pds]
+            )
+            for d in range(args.devices)
         )
+        occ = engine.device_occupancy()
+        dev = f"  per-device {occ}" if args.devices > 1 else ""
         fin = " ".join(f"req{c.request_id}[{c.finish_reason}]" for c in newly)
         print(f"step {engine.step_count - 1:3d}  slots [{marks}] "
-              f"active={live}" + (f"  finished: {fin}" if fin else ""))
+              f"active={live}{dev}" + (f"  finished: {fin}" if fin else ""))
     dt = time.time() - t0
 
     m = engine.metrics()
@@ -65,6 +95,10 @@ def main():
     print(f"slot utilization {m['mean_slot_utilization']*100:.0f}%  "
           f"fused-step compilations {m['fused_step_compilations']} (jit-once), "
           f"per-length prefill compilations {m['prefill_compilations']}")
+    if args.devices > 1:
+        print(f"sharded: {m['num_devices']} devices x {m['per_device_slots']} "
+              f"slots — admissions/device {m['device_admits']}, "
+              f"balance {m['shard_balance']:.2f} (1.0 = perfectly even)")
     lat = [c.latency_s for c in engine.completions]
     print(f"latency p50 {np.median(lat)*1e3:.0f}ms  max {max(lat)*1e3:.0f}ms")
 

@@ -1,0 +1,47 @@
+"""Pre-jax-init host-device forcing for CPU demos.
+
+XLA reads ``--xla_force_host_platform_device_count`` exactly once, at
+backend creation — so any entry point that wants ``--devices N`` to "just
+work" on CPU must set the flag BEFORE its first ``import jax``.  This
+module deliberately imports nothing but the stdlib so it is safe to import
+first; callers gate it themselves (the smoke launcher only fires under
+``--smoke``, the example demo always — both are reduced-config CPU paths).
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Optional
+
+
+def devices_from_argv(argv: Optional[list] = None) -> Optional[int]:
+    """The value of ``--devices N`` / ``--devices=N`` in ``argv`` (default
+    ``sys.argv``), or None when absent/malformed — argparse will report the
+    malformed case properly later."""
+    argv = sys.argv if argv is None else argv
+    for i, arg in enumerate(argv):
+        if arg == "--devices" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif arg.startswith("--devices="):
+            val = arg.split("=", 1)[1]
+        else:
+            continue
+        try:
+            return int(val)
+        except ValueError:
+            return None
+    return None
+
+
+def force_host_devices(argv: Optional[list] = None) -> None:
+    """Set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for the
+    ``--devices N`` found in ``argv``, unless the operator already set the
+    flag (an explicit setting always wins).  No-op for N <= 1 or no flag."""
+    n = devices_from_argv(argv)
+    if n is None or n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )

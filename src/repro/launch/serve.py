@@ -17,11 +17,26 @@ Two modes:
 Usage (CPU smoke scale):
   python -m repro.launch.serve --arch internlm2-1.8b --smoke --batches 3
   python -m repro.launch.serve --smoke --continuous
+  python -m repro.launch.serve --smoke --continuous --devices 2
+
+``--continuous --devices N`` shards the slot pool over an N-device mesh
+(slot-axis NamedSharding, least-loaded admission — docs/serving.md §Device
+mesh).  Under ``--smoke`` (CPU) the launcher forces N host-platform devices
+itself; on real hardware export the matching XLA/topology env first.
 """
 from __future__ import annotations
 
 import argparse
+import sys as _sys
 import time
+
+from repro.launch._host_devices import force_host_devices
+
+# --smoke --devices N on CPU: force N host-platform devices BEFORE jax
+# initializes (XLA reads the flag once at backend creation).  Only fires
+# for the smoke path; an explicit operator XLA_FLAGS always wins.
+if "--smoke" in _sys.argv:
+    force_host_devices()
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +51,7 @@ from repro.serve.engine import (
     ServeConfig,
     generate,
     perplexity,
+    round_slots_to_devices,
     static_reference,
 )
 from repro.serve.workload import required_max_seq, staggered_requests
@@ -71,16 +87,22 @@ def _serve_continuous(model, cfg, params, args, scfg):
         max_new_tokens=args.new_tokens, stagger=args.stagger, seed=11,
     )
     max_seq = required_max_seq(reqs)
-    engine = ContinuousEngine(model, params, num_slots=args.num_slots,
-                              max_seq=max_seq, cfg=scfg, chunk=args.chunk)
+    num_slots = round_slots_to_devices(args.num_slots, args.devices)
+    engine = ContinuousEngine(model, params, num_slots=num_slots,
+                              max_seq=max_seq, cfg=scfg, chunk=args.chunk,
+                              devices=args.devices)
     t0 = time.time()
     comps = engine.run(reqs)
     dt = time.time() - t0
     m = engine.metrics()
     gen_tok = m["generated_tokens"]
     print(f"continuous: {len(comps)} requests, {gen_tok} tokens in {dt:.2f}s "
-          f"({gen_tok/dt:.1f} tok/s)  slots={args.num_slots} "
+          f"({gen_tok/dt:.1f} tok/s)  slots={num_slots} "
           f"util={m['mean_slot_utilization']:.2f}")
+    if m["num_devices"] > 1:
+        print(f"slot pool sharded over {m['num_devices']} devices "
+              f"({m['per_device_slots']} slots each): admissions/device "
+              f"{m['device_admits']}, balance {m['shard_balance']:.2f}")
     print(f"fused step compiled {m['fused_step_compilations']}x, decode "
           f"{m['decode_compilations']}x, per-prompt-length prefill "
           f"{m['prefill_compilations']}x  (chunk={m['chunk']}, intake "
@@ -138,6 +160,9 @@ def main(argv=None):
                     help="continuous: arrival gap between requests (steps)")
     ap.add_argument("--chunk", type=int, default=8,
                     help="continuous: prefill chunk size (fused-step lanes)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="continuous: shard the slot pool over N devices "
+                         "(--smoke forces N host-platform devices itself)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

@@ -665,6 +665,28 @@ class Model:
 
         return {**specs, "layers": jax.tree.map(repage, specs["layers"])}
 
+    def paged_cache_logical_axes(self):
+        """Logical sharding axes tree parallel to ``paged_cache_specs``.
+
+        The per-layer arenas trade the (slot, kv_seq) dims for (num_blocks,
+        block_size): the *block* axis inherits the slot pool's 'batch' rule —
+        the serving mesh shards blocks over the same device axis as slots,
+        and the pool hands each slot blocks from its own device's range, so
+        a sequence's KV stays resident with its slot shard — while the
+        intra-block dim is replicated like any other sequence dim.  Non-paged
+        leaves (encdec cross KV, vlm patches) keep their slot-batched axes.
+        """
+        axes = self.cache_logical_axes()
+
+        def repage(ax):
+            # (layers, batch/slot, kv_seq, *rest) -> (layers, blocks, in-block, *rest)
+            return (ax[0], "batch", None) + tuple(ax[3:])
+
+        layers = jax.tree.map(
+            repage, axes["layers"], is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return {**axes, "layers": layers}
+
     def init_paged_cache(self, num_slots: int, num_blocks: int,
                          block_size: int, max_seq: int):
         return jax.tree.map(

@@ -19,6 +19,7 @@ import threading
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 DEFAULT_RULES: dict[str, object] = {
@@ -49,6 +50,37 @@ SP_OVERRIDES = {
     "batch": None,
     "kv_seq": ("pod", "data", "model"),
 }
+
+
+def make_slot_mesh(num_devices: int) -> Mesh:
+    """1-D serving mesh over the slot/batch axis.
+
+    The continuous-batching engine shards its slot pool along the cache's
+    ``batch`` (= slot) dimension; under the default rules ``batch`` maps to
+    the ``data`` mesh axis, so a 1-D ``("data",)`` mesh over the first
+    ``num_devices`` devices is all the serving path needs — every other
+    logical axis (``kv_seq``/``heads_tp``/``vocab`` -> 'model') drops out
+    because the mesh has no 'model' axis, leaving per-device slot shards
+    with replicated params.  Device d owns the contiguous slot range
+    [d*per_device, (d+1)*per_device), matching NamedSharding's row-major
+    layout, so host-side range accounting and XLA placement agree.
+    """
+    devs = jax.devices()
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    if num_devices > len(devs):
+        raise ValueError(
+            f"slot mesh wants {num_devices} devices but only {len(devs)} are "
+            "visible; on CPU export XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={num_devices} before the process starts"
+        )
+    return Mesh(np.asarray(devs[:num_devices]), ("data",))
+
+
+def slot_ctx(mesh: Mesh) -> ShardingCtx:
+    """Sharding context for the serving slot pool (default rules: the cache
+    'batch' axis — the slot axis — shards over 'data')."""
+    return ShardingCtx(mesh, dict(DEFAULT_RULES))
 
 
 @dataclasses.dataclass

@@ -26,10 +26,21 @@ Two paths share the per-family caches from ``models/transformer.py``:
   SSM/hybrid carries and sliding-window rings keep the slot-monolithic
   ``SlotKVPool``.
 
+  ``devices=N`` shards the slot pool over an N-device mesh along the
+  slot/batch axis (slot-axis NamedSharding from parallel/sharding.py's
+  rules; the GN guarantees are layout-independent, so per-device slot
+  shards change placement, never values): both compile-once jits run SPMD,
+  admission places the FCFS head on the least-loaded device's slot range,
+  and ``metrics()`` reports num_devices / per_device_slots / shard_balance.
+  ``devices=1`` (default) builds no mesh and is bit-identical to the
+  single-device engine.
+
 Layering: scheduler (admission + chunk-grid bucketing) -> kv_cache (slot/
-block residency, block tables, offset-ranged positions) -> engine (this
-file: the fused step, sampling, phase state machine, stop conditions,
-metrics).
+block residency, block tables, device placement + per-device ranges,
+offset-ranged positions) -> engine (this file: the fused step, sampling,
+phase state machine, least-loaded placement, stop conditions, metrics).
+See docs/serving.md for the full architecture and docs/benchmarks.md for
+how ``metrics()`` feeds the BENCH_serve.json schema.
 """
 from __future__ import annotations
 
@@ -41,8 +52,10 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.transformer import Model
+from repro.parallel.sharding import make_slot_mesh
 from repro.serve.kv_cache import BlockPagedKVPool, SlotKVPool
 from repro.serve.scheduler import Completion, FCFSScheduler, Request, pad_to_grid
 
@@ -73,6 +86,13 @@ class CountingJit:
     @property
     def compilations(self) -> int:
         return self._count
+
+
+def round_slots_to_devices(num_slots: int, devices: int) -> int:
+    """Smallest slot count >= ``num_slots`` that shards evenly over
+    ``devices`` — the engine requires exact divisibility (per-device slot
+    shards), so CLIs round their requested pool size up through this."""
+    return -(-int(num_slots) // int(devices)) * int(devices)
 
 
 @dataclasses.dataclass
@@ -207,7 +227,8 @@ class ContinuousEngine:
     def __init__(self, model: Model, params, num_slots: int, max_seq: int,
                  cfg: ServeConfig = ServeConfig(),
                  scheduler: Optional[FCFSScheduler] = None,
-                 chunk: int = 8, block_size: int = 0, num_blocks: int = 0):
+                 chunk: int = 8, block_size: int = 0, num_blocks: int = 0,
+                 devices: int = 1, paged: Optional[bool] = None):
         self.model, self.params, self.cfg = model, params, cfg
         self.num_slots, self.max_seq = int(num_slots), int(max_seq)
         self.chunk = int(chunk)
@@ -218,23 +239,56 @@ class ContinuousEngine:
                 f"chunk {chunk} must be in [1, {limit}] "
                 "(cache ring capacity bounds the per-tick chunk)"
             )
+        # Slot-pool sharding over the batch axis: devices=N builds a 1-D
+        # ('data',) mesh, the pools place every cache leaf with a slot-axis
+        # NamedSharding and both compile-once jits run SPMD over per-device
+        # slot shards.  devices=1 builds no mesh at all — the single-device
+        # path is bit-identical to the unsharded engine.
+        self.num_devices = int(devices)
+        if self.num_devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        if self.num_slots % self.num_devices:
+            raise ValueError(
+                f"num_slots {num_slots} must divide evenly over "
+                f"{devices} devices (per-device slot shards)"
+            )
+        self.mesh = make_slot_mesh(self.num_devices) if self.num_devices > 1 else None
+        if self.mesh is not None:
+            self._sh_slot = NamedSharding(self.mesh, P("data"))       # (N,)
+            self._sh_row = NamedSharding(self.mesh, P("data", None))  # (N, ...)
+            self._sh_rep = NamedSharding(self.mesh, P())              # replicated
+        else:
+            self._sh_slot = self._sh_row = self._sh_rep = None
         # Block-paged KV wherever the family's cache is pageable (dense/moe/
         # encdec/vlm full-attention KV, MLA latents): HBM scales with live
         # tokens, admission gates on free blocks.  SSM/hybrid carries and
-        # sliding-window rings keep the slot-monolithic pool.
-        self.paged = model.supports_paging
+        # sliding-window rings keep the slot-monolithic pool.  ``paged``
+        # overrides the auto-selection (False forces the slab pool for a
+        # pageable family — the bench's HBM baseline and the sharded slab
+        # test path; True on an unpageable family is an error).
+        self.paged = model.supports_paging if paged is None else bool(paged)
+        if self.paged and not model.supports_paging:
+            raise ValueError(
+                f"family {model.cfg.family!r} (sliding_window="
+                f"{model.cfg.sliding_window}) has no pageable KV"
+            )
         if self.paged:
             self.pool = BlockPagedKVPool(
                 model, num_slots, max_seq,
                 block_size=block_size or self.chunk, num_blocks=num_blocks,
+                mesh=self.mesh, num_devices=self.num_devices,
             )
         else:
             if block_size or num_blocks:
                 raise ValueError(
                     f"family {model.cfg.family!r} has no pageable KV; "
                     "block_size/num_blocks only apply to paged pools"
+                    if not model.supports_paging else
+                    "block_size/num_blocks only apply to paged pools "
+                    "(paged=False forces the slab pool)"
                 )
-            self.pool = SlotKVPool(model, num_slots, max_seq)
+            self.pool = SlotKVPool(model, num_slots, max_seq,
+                                   mesh=self.mesh, num_devices=self.num_devices)
 
         # Donating the tick-carried state (cache tree, held logits,
         # positions, key) lets XLA update the cache in place instead of
@@ -258,13 +312,20 @@ class ContinuousEngine:
         # bench's compile-count trajectory) actually counts it.
         self._length_prefills: dict = {}
         # family-initial batch-1 cache paged in at admission (chunked prefill
-        # starts from an empty slot; built once, reused for every request)
-        self._fresh_cache = model.fresh_request_cache(self.max_seq)
+        # starts from an empty slot; built once, reused for every request).
+        # Replicated under a mesh: admission writes it into any slot shard.
+        self._fresh_cache = self._put(model.fresh_request_cache(self.max_seq),
+                                      self._sh_rep)
         self._encode_cross = (
             jax.jit(model.encode_cross_kv)
             if model.cfg.family == "encdec" else None
         )
         self.reset(scheduler)
+
+    def _put(self, x, sharding):
+        """Commit ``x`` (array or tree) to the serving mesh with ``sharding``;
+        identity placement when the engine is single-device (no mesh)."""
+        return x if sharding is None else jax.device_put(x, sharding)
 
     def reset(self, scheduler: Optional[FCFSScheduler] = None) -> None:
         """Clear all serving state but keep compiled functions and the pool
@@ -280,17 +341,21 @@ class ContinuousEngine:
         # onto the device only when admission/completion changes lane
         # residency (_lanes_dirty), so a steady-state tick costs exactly one
         # jitted dispatch + one token download.
-        self._last_logits = jnp.zeros((self.num_slots, vocab), jnp.float32)
+        self._last_logits = self._put(
+            jnp.zeros((self.num_slots, vocab), jnp.float32), self._sh_row
+        )
         self._temps = np.zeros(self.num_slots, np.float32)
         self._slots: list[Optional[_SlotState]] = [None] * self.num_slots
-        self._pos_dev = jnp.zeros(self.num_slots, jnp.int32)
-        self._active_dev = jnp.zeros(self.num_slots, bool)
-        self._temps_dev = jnp.zeros(self.num_slots, jnp.float32)
+        self._pos_dev = self._put(jnp.zeros(self.num_slots, jnp.int32), self._sh_slot)
+        self._active_dev = self._put(jnp.zeros(self.num_slots, bool), self._sh_slot)
+        self._temps_dev = self._put(
+            jnp.zeros(self.num_slots, jnp.float32), self._sh_slot
+        )
         self._lanes_dirty = True
         if self.paged:
-            self._tables_dev = jnp.asarray(self.pool.tables)
+            self._tables_dev = self._put(jnp.asarray(self.pool.tables), self._sh_row)
             self.pool.tables_dirty = False
-        self._key = jax.random.PRNGKey(self.cfg.seed)
+        self._key = self._put(jax.random.PRNGKey(self.cfg.seed), self._sh_rep)
         self.step_count = 0
         self.completions: list[Completion] = []
         self._active_steps = 0   # sum over decode steps of active-slot count
@@ -299,9 +364,27 @@ class ContinuousEngine:
         self._prefill_lane_steps = 0  # sum over ticks of prefilling slots
         self._generated = 0
         self.phase_log: list[tuple[int, int]] = []  # (prefill, decode) lanes/tick
+        self._device_admits = np.zeros(self.num_devices, np.int64)
         self.scheduler = scheduler or FCFSScheduler(chunk_grid=self.chunk)
 
     # ---------------------------------------------------------- jitted step --
+    def _pin(self, x, sharding):
+        """Sharding constraint inside a jitted step (no-op without a mesh).
+        Pinning the per-slot tick state at entry and exit makes both
+        compile-once jits SPMD over per-device slot shards — the cache tree
+        arrives pre-sharded (committed by the pool), and GSPMD propagates
+        the slot axis through the vmapped/batched layer stack between the
+        pins."""
+        return x if sharding is None else jax.lax.with_sharding_constraint(x, sharding)
+
+    def _pin_state(self, last_logits, positions, active, temps):
+        return (
+            self._pin(last_logits, self._sh_row),
+            self._pin(positions, self._sh_slot),
+            self._pin(active, self._sh_slot),
+            self._pin(temps, self._sh_slot),
+        )
+
     def _sample_next(self, last_logits, active, is_prefill, temps, key):
         """Next decode token per slot from the held logits.  The key evolves
         inside the step (split traced) so ticks cost no extra host dispatch."""
@@ -319,6 +402,9 @@ class ContinuousEngine:
         Everything per-slot is a traced array -> a single compilation.
         Positions advance in-jit; the host mirror tracks them without a
         per-tick transfer."""
+        last_logits, positions, active, temps = self._pin_state(
+            last_logits, positions, active, temps
+        )
         nxt, key = self._sample_next(
             last_logits, active, jnp.zeros_like(active), temps, key
         )
@@ -328,7 +414,8 @@ class ContinuousEngine:
             active[:, None], logits[:, 0].astype(jnp.float32), last_logits
         )
         new_positions = positions + jnp.where(active, 1, 0).astype(positions.dtype)
-        return nxt, new_last, ncache, new_positions, key
+        return (self._pin(nxt, self._sh_slot), self._pin(new_last, self._sh_row),
+                ncache, self._pin(new_positions, self._sh_slot), key)
 
     def _fused_step(self, params, cache, last_logits, chunk_tokens, positions,
                     n_valid, is_prefill, active, temps, key):
@@ -336,6 +423,12 @@ class ContinuousEngine:
         decoding slots sample their next token from the held logits into
         lane 0 (n_valid=1), prefilling slots take the staged prompt chunk.
         One compilation covers every phase/length/occupancy mix."""
+        last_logits, positions, active, temps = self._pin_state(
+            last_logits, positions, active, temps
+        )
+        chunk_tokens = self._pin(chunk_tokens, self._sh_row)
+        n_valid = self._pin(n_valid, self._sh_slot)
+        is_prefill = self._pin(is_prefill, self._sh_slot)
         dec, key = self._sample_next(last_logits, active, is_prefill, temps, key)
         lane0 = jnp.zeros_like(chunk_tokens).at[:, 0].set(dec)
         tokens = jnp.where(is_prefill[:, None], chunk_tokens, lane0)
@@ -351,7 +444,8 @@ class ContinuousEngine:
             active[:, None], logits[:, 0].astype(jnp.float32), last_logits
         )
         new_positions = positions + jnp.where(active, nv, 0).astype(positions.dtype)
-        return dec, new_last, ncache, new_positions, key
+        return (self._pin(dec, self._sh_slot), self._pin(new_last, self._sh_row),
+                ncache, self._pin(new_positions, self._sh_slot), key)
 
     # ------------------------------------------------- paged jitted steps --
     # Same tick contract as the slab steps, but the cache is the shared
@@ -362,6 +456,10 @@ class ContinuousEngine:
 
     def _decode_sample_paged(self, params, cache, last_logits, positions,
                              active, temps, key, tables):
+        last_logits, positions, active, temps = self._pin_state(
+            last_logits, positions, active, temps
+        )
+        tables = self._pin(tables, self._sh_row)
         nxt, key = self._sample_next(
             last_logits, active, jnp.zeros_like(active), temps, key
         )
@@ -374,11 +472,19 @@ class ContinuousEngine:
             active[:, None], logits[:, 0].astype(jnp.float32), last_logits
         )
         new_positions = positions + nv.astype(positions.dtype)
-        return nxt, new_last, ncache, new_positions, key
+        return (self._pin(nxt, self._sh_slot), self._pin(new_last, self._sh_row),
+                ncache, self._pin(new_positions, self._sh_slot), key)
 
     def _fused_step_paged(self, params, cache, last_logits, chunk_tokens,
                           positions, n_valid, is_prefill, active, temps, key,
                           tables):
+        last_logits, positions, active, temps = self._pin_state(
+            last_logits, positions, active, temps
+        )
+        chunk_tokens = self._pin(chunk_tokens, self._sh_row)
+        n_valid = self._pin(n_valid, self._sh_slot)
+        is_prefill = self._pin(is_prefill, self._sh_slot)
+        tables = self._pin(tables, self._sh_row)
         dec, key = self._sample_next(last_logits, active, is_prefill, temps, key)
         lane0 = jnp.zeros_like(chunk_tokens).at[:, 0].set(dec)
         tokens = jnp.where(is_prefill[:, None], chunk_tokens, lane0)
@@ -392,7 +498,8 @@ class ContinuousEngine:
             active[:, None], logits[:, 0].astype(jnp.float32), last_logits
         )
         new_positions = positions + jnp.where(active, nv, 0).astype(positions.dtype)
-        return dec, new_last, ncache, new_positions, key
+        return (self._pin(dec, self._sh_slot), self._pin(new_last, self._sh_row),
+                ncache, self._pin(new_positions, self._sh_slot), key)
 
     # ------------------------------------------------------------ admission --
     def submit(self, req: Request) -> int:
@@ -402,7 +509,13 @@ class ContinuousEngine:
         """Page empty cache slots in for ready requests.  No forward pass
         happens here — the fused step drains the prompt chunk-by-chunk —
         so admission cost is one traced-slot insert regardless of prompt
-        length, and there is no per-prompt-length prefill compilation."""
+        length, and there is no per-prompt-length prefill compilation.
+
+        Placement is least-loaded-first across the device mesh: the FCFS
+        head lands in the slot range of the device with the most free slots
+        (paged: whose block range can also cover its whole-footprint
+        reservation), so one hot device cannot strand free slots elsewhere.
+        With one device this degenerates to the historical global FIFO."""
         admitted = []
         while self.pool.num_free:
             head = self.scheduler.peek_ready(self.step_count)
@@ -414,20 +527,24 @@ class ContinuousEngine:
                     f"request {head.id}: prompt {head.prompt_len} + "
                     f"{head.max_new_tokens} new tokens exceeds max_seq {self.max_seq}"
                 )
-            if self.paged:
-                if self.pool.blocks_for(footprint) > self.pool.num_blocks:
-                    raise ValueError(
-                        f"request {head.id}: footprint {footprint} tokens needs "
-                        f"{self.pool.blocks_for(footprint)} blocks, arena has "
-                        f"{self.pool.num_blocks} — unservable at any occupancy"
-                    )
-                if not self.pool.can_reserve(footprint):
-                    break  # admit on free *blocks*: FCFS head waits for recycling
+            if self.paged and (
+                self.pool.blocks_for(footprint) > self.pool.max_request_blocks
+            ):
+                raise ValueError(
+                    f"request {head.id}: footprint {footprint} tokens needs "
+                    f"{self.pool.blocks_for(footprint)} blocks, a device's "
+                    f"arena shard has {self.pool.max_request_blocks} — "
+                    "unservable at any occupancy"
+                )
+            device = self.pool.pick_device(footprint if self.paged else 0)
+            if device is None:
+                break  # admit on free *blocks*: FCFS head waits for recycling
             req = self.scheduler.pop_ready(self.step_count)
             slot = (
-                self.pool.allocate(reserve_tokens=footprint)
-                if self.paged else self.pool.allocate()
+                self.pool.allocate(reserve_tokens=footprint, device=device)
+                if self.paged else self.pool.allocate(device=device)
             )
+            self._device_admits[device] += 1
             fresh = self._fresh_cache
             if self._encode_cross is not None:
                 frames = jnp.asarray(req.extras["frames"])[None]
@@ -486,11 +603,12 @@ class ContinuousEngine:
         prefills = [s for s in live if self._slots[s].phase == "prefilling"]
         decoders = [s for s in live if self._slots[s].phase == "decoding"]
         if self._lanes_dirty:  # residency changed: refresh device mirrors
-            self._active_dev = jnp.asarray(
-                np.array([st is not None for st in self._slots])
+            self._active_dev = self._put(
+                jnp.asarray(np.array([st is not None for st in self._slots])),
+                self._sh_slot,
             )
-            self._temps_dev = jnp.asarray(self._temps)
-            self._pos_dev = jnp.asarray(self.pool.positions)
+            self._temps_dev = self._put(jnp.asarray(self._temps), self._sh_slot)
+            self._pos_dev = self._put(jnp.asarray(self.pool.positions), self._sh_slot)
             self._lanes_dirty = False
 
         takes: dict[int, int] = {}
@@ -503,7 +621,9 @@ class ContinuousEngine:
             for s in live:
                 self.pool.ensure(s, int(self.pool.positions[s]) + takes.get(s, 1))
             if self.pool.tables_dirty:
-                self._tables_dev = jnp.asarray(self.pool.tables)
+                self._tables_dev = self._put(
+                    jnp.asarray(self.pool.tables), self._sh_row
+                )
                 self.pool.tables_dirty = False
         paged_args = (self._tables_dev,) if self.paged else ()
         if prefills:
@@ -576,6 +696,26 @@ class ContinuousEngine:
         return self.completions
 
     # -------------------------------------------------------------- metrics --
+    def device_occupancy(self) -> list[int]:
+        """Live (admitted) slots per device range right now — the quantity
+        least-loaded placement balances."""
+        pds = self.num_slots // self.num_devices
+        return [
+            sum(st is not None for st in self._slots[d * pds : (d + 1) * pds])
+            for d in range(self.num_devices)
+        ]
+
+    @property
+    def shard_balance(self) -> float:
+        """Admission balance across device slot ranges: min/max of per-device
+        admitted-request counts (1.0 = perfectly balanced, and trivially 1.0
+        single-device).  The bench tracks it next to num_devices so a
+        placement regression (one hot device hoarding admissions) shows up
+        in the history trajectory."""
+        if self.num_devices == 1 or self._device_admits.max() == 0:
+            return 1.0
+        return float(self._device_admits.min() / self._device_admits.max())
+
     def metrics(self) -> dict:
         util = self._active_steps / max(1, self._decode_steps * self.num_slots)
         pref = self._prefill_lane_steps / max(1, self._active_steps)
@@ -600,6 +740,12 @@ class ContinuousEngine:
             ),
             "kv_paged": self.paged,
             "kv_hbm_bytes": self.pool.hbm_bytes(),
+            # slot-pool sharding over the batch axis (devices=1 -> one range,
+            # balance trivially 1.0; see docs/serving.md §Device mesh)
+            "num_devices": self.num_devices,
+            "per_device_slots": self.num_slots // self.num_devices,
+            "shard_balance": self.shard_balance,
+            "device_admits": [int(n) for n in self._device_admits],
         }
         if self.paged:
             out.update(

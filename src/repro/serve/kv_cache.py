@@ -22,13 +22,101 @@ so slot/block reuse order is deterministic (replay identity leans on it).
 The per-family cache layouts are handled generically through
 ``Model.cache_batch_axes`` / ``Model.paged_cache_specs`` — this file never
 looks inside the tree.
+
+Multi-device (``mesh`` != None): both pools place every device leaf with a
+slot-axis ``NamedSharding`` built from the rules in ``parallel/sharding.py``
+(the cache 'batch' axis — the slot axis — shards over the 1-D 'data' serving
+mesh; see ``make_slot_mesh``).  Device d owns the contiguous slot range
+[d*per_device_slots, (d+1)*per_device_slots), and, in the paged pool, the
+matching contiguous block range — a slot only ever receives blocks from its
+own device, so a sequence's KV stays resident with its slot shard.
+Admission placement (``pick_device``) is least-loaded-first so one hot
+device cannot strand free slots elsewhere; with one device every range
+collapses to the whole pool and behavior is bit-identical to the unsharded
+pools.
 """
 from __future__ import annotations
 
 from collections import deque
+from typing import Optional
 
 import jax
 import numpy as np
+
+
+def shard_cache_tree(cache, mesh, axes_tree):
+    """Place a cache tree on the serving mesh: every leaf gets the
+    ``NamedSharding`` its logical axes imply under the default rules
+    (slot/batch axis -> 'data'; axes whose mesh axis is absent, or whose dim
+    doesn't divide, replicate).  ``axes_tree`` is parallel to ``cache`` with
+    logical-axis tuples as leaves (``Model.cache_logical_axes`` /
+    ``paged_cache_logical_axes``).  No-op when ``mesh`` is None."""
+    if mesh is None:
+        return cache
+    from repro.parallel.sharding import slot_ctx
+
+    ctx = slot_ctx(mesh)
+    shardings = jax.tree.map(
+        lambda ax, leaf: ctx.sharding_for_shape(leaf.shape, ax),
+        axes_tree, cache, is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return jax.tree.map(jax.device_put, cache, shardings)
+
+
+class _SlotRanges:
+    """Per-device slot-range accounting shared by both pools.
+
+    Device d owns slots [d*per_device_slots, (d+1)*per_device_slots) — the
+    contiguous layout a slot-axis NamedSharding gives the cache leaves, so
+    host placement and XLA placement agree.  ``num_devices=1`` makes the
+    single range the whole pool and every method collapse to the unsharded
+    behavior."""
+
+    def _init_ranges(self, num_slots: int, mesh, num_devices: int) -> None:
+        self.mesh = mesh
+        self.num_devices = int(num_devices) or (
+            int(mesh.devices.size) if mesh is not None else 1
+        )
+        if self.num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got {self.num_devices}")
+        if mesh is not None and int(mesh.devices.size) != self.num_devices:
+            raise ValueError(
+                f"mesh has {int(mesh.devices.size)} devices, num_devices says "
+                f"{self.num_devices}"
+            )
+        if num_slots % self.num_devices:
+            raise ValueError(
+                f"num_slots {num_slots} must divide evenly over "
+                f"{self.num_devices} devices (per-device slot shards)"
+            )
+        self.per_device_slots = num_slots // self.num_devices
+
+    def device_of(self, slot: int) -> int:
+        return int(slot) // self.per_device_slots
+
+    def free_slots_on(self, device: int) -> int:
+        lo = device * self.per_device_slots
+        hi = lo + self.per_device_slots
+        return sum(1 for s in self._free_slot_list() if lo <= s < hi)
+
+    def _pop_free_slot(self, device: Optional[int]) -> int:
+        """Oldest free slot, optionally restricted to a device's range —
+        FIFO within the range, so device-0/1-device allocation order is
+        exactly the historical global FIFO order."""
+        free = self._free_slot_list()
+        if not free:
+            raise RuntimeError(f"{type(self).__name__} exhausted: no free slot")
+        if device is None:
+            return free.popleft()
+        lo = device * self.per_device_slots
+        hi = lo + self.per_device_slots
+        for slot in free:
+            if lo <= slot < hi:
+                free.remove(slot)
+                return slot
+        raise RuntimeError(
+            f"{type(self).__name__}: no free slot on device {device}"
+        )
 
 
 def tree_bytes(tree) -> int:
@@ -39,18 +127,26 @@ def tree_bytes(tree) -> int:
     )
 
 
-class SlotKVPool:
+class SlotKVPool(_SlotRanges):
     """Fixed-capacity slot pool over ``model.init_cache(num_slots, max_seq)``.
 
     Tracks per-slot absolute position (next KV write index) host-side and
     slot residency (free list is FIFO so slot reuse order is deterministic).
+    With a serving ``mesh`` every cache leaf is placed with a slot-axis
+    NamedSharding and device d owns the slot range
+    [d*per_device_slots, (d+1)*per_device_slots).
     """
 
-    def __init__(self, model, num_slots: int, max_seq: int):
+    def __init__(self, model, num_slots: int, max_seq: int,
+                 mesh=None, num_devices: int = 0):
         self.model = model
         self.num_slots = int(num_slots)
         self.max_seq = int(max_seq)
-        self.cache = model.init_cache(self.num_slots, self.max_seq)
+        self._init_ranges(self.num_slots, mesh, num_devices)
+        self.cache = shard_cache_tree(
+            model.init_cache(self.num_slots, self.max_seq),
+            mesh, model.cache_logical_axes(),
+        )
         self.positions = np.zeros(self.num_slots, np.int32)
         self._free: deque[int] = deque(range(self.num_slots))
         self._used: set[int] = set()
@@ -58,6 +154,9 @@ class SlotKVPool:
         # lets the per-slot page-in write in place instead of copying
         self._insert = jax.jit(model.insert_cache_slot, donate_argnums=(0,))
         self._extract = jax.jit(model.extract_cache_slot)
+
+    def _free_slot_list(self) -> deque:
+        return self._free
 
     # ------------------------------------------------------------ residency --
     def reset(self) -> None:
@@ -86,10 +185,21 @@ class SlotKVPool:
     def num_used(self) -> int:
         return len(self._used)
 
-    def allocate(self) -> int:
-        if not self._free:
-            raise RuntimeError("SlotKVPool exhausted: no free slot")
-        slot = self._free.popleft()
+    def pick_device(self, reserve_tokens: int = 0) -> Optional[int]:
+        """Admission placement: the least-loaded device (most free slots in
+        its range; ties break toward the lowest index, which with one device
+        is always device 0 — the historical behavior).  Returns None when no
+        device has a free slot.  ``reserve_tokens`` is accepted for API
+        parity with the paged pool and ignored (slabs reserve nothing)."""
+        best, best_free = None, 0
+        for d in range(self.num_devices):
+            free = self.free_slots_on(d)
+            if free > best_free:
+                best, best_free = d, free
+        return best
+
+    def allocate(self, device: Optional[int] = None) -> int:
+        slot = self._pop_free_slot(device)
         self._used.add(slot)
         return slot
 
@@ -130,7 +240,7 @@ class SlotKVPool:
             self.positions[slot] = new
 
 
-class BlockPagedKVPool:
+class BlockPagedKVPool(_SlotRanges):
     """Block-granular KV pool over ``model.init_paged_cache``.
 
     Device state: the shared block arenas (per-layer KV/latent leaves) plus
@@ -138,6 +248,12 @@ class BlockPagedKVPool:
     state: per-slot positions, per-slot block tables (np mirror, pushed to
     device by the engine when ``tables_dirty``), FIFO free lists for slots
     and blocks, and per-slot whole-request block *reservations*.
+
+    Multi-device: the arenas shard over the *block* axis and device d owns
+    the contiguous block range [d*blocks_per_device, (d+1)*blocks_per_device)
+    alongside its slot range — ``ensure`` only hands a slot blocks from its
+    own device, so the gathered logical stream is device-local and the
+    reservation ledger (and therefore admission) is per-device.
 
     Reservation contract: ``allocate(reserve_tokens=n)`` admits a request
     only after ``can_reserve(n)`` said the arena can cover its worst-case
@@ -153,19 +269,27 @@ class BlockPagedKVPool:
     """
 
     def __init__(self, model, num_slots: int, max_seq: int,
-                 block_size: int, num_blocks: int = 0):
+                 block_size: int, num_blocks: int = 0,
+                 mesh=None, num_devices: int = 0):
         self.model = model
         self.num_slots = int(num_slots)
         self.max_seq = int(max_seq)
         self.block_size = int(block_size)
         if self.block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self._init_ranges(self.num_slots, mesh, num_devices)
         self.max_blocks_per_slot = -(-self.max_seq // self.block_size)
         # 0 = slab-equivalent capacity (never admission-blocks); benches pass
-        # a tight count to measure the live-token footprint
-        self.num_blocks = int(num_blocks) or self.num_slots * self.max_blocks_per_slot
-        self.cache = model.init_paged_cache(
-            self.num_slots, self.num_blocks, self.block_size, self.max_seq
+        # a tight count to measure the live-token footprint.  The arena is
+        # rounded up to a device multiple so the block axis shards evenly.
+        nb = int(num_blocks) or self.num_slots * self.max_blocks_per_slot
+        self.num_blocks = -(-nb // self.num_devices) * self.num_devices
+        self.blocks_per_device = self.num_blocks // self.num_devices
+        self.cache = shard_cache_tree(
+            model.init_paged_cache(
+                self.num_slots, self.num_blocks, self.block_size, self.max_seq
+            ),
+            mesh, model.paged_cache_logical_axes(),
         )
         self.positions = np.zeros(self.num_slots, np.int32)
         # physical ids; entries past a slot's allocated prefix are stale but
@@ -185,12 +309,24 @@ class BlockPagedKVPool:
         self.tables[:] = 0
         self.tables_dirty = True
         self._free_slots: deque[int] = deque(range(self.num_slots))
-        self._free_blocks: deque[int] = deque(range(self.num_blocks))
+        # per-device FIFO block lists: device d recycles only its own range,
+        # so replay determinism holds per shard exactly as it did globally
+        bpd = self.blocks_per_device
+        self._free_blocks: list[deque[int]] = [
+            deque(range(d * bpd, (d + 1) * bpd)) for d in range(self.num_devices)
+        ]
         self._used: set[int] = set()
         self._slot_blocks: dict[int, list[int]] = {}
         self._reserved = np.zeros(self.num_slots, np.int32)  # blocks, whole-request
         self.peak_blocks_in_use = 0
         self.peak_blocks_reserved = 0
+        # per-device reservation peaks: the bench's tight-arena rerun sizes
+        # each device's shard for ITS peak (a global peak split evenly could
+        # under-provision the hotter shard under imbalanced placement)
+        self.peak_reserved_per_device = np.zeros(self.num_devices, np.int64)
+
+    def _free_slot_list(self) -> deque:
+        return self._free_slots
 
     @property
     def num_free(self) -> int:
@@ -202,48 +338,91 @@ class BlockPagedKVPool:
 
     @property
     def blocks_in_use(self) -> int:
-        return self.num_blocks - len(self._free_blocks)
+        return self.num_blocks - sum(len(f) for f in self._free_blocks)
 
     @property
     def blocks_reserved(self) -> int:
         return int(self._reserved.sum())
 
+    @property
+    def max_request_blocks(self) -> int:
+        """Largest footprint one request can ever hold: a slot's blocks all
+        come from its own device's range."""
+        return self.blocks_per_device
+
     def blocks_for(self, tokens: int) -> int:
         return -(-int(tokens) // self.block_size)
 
-    def can_reserve(self, tokens: int) -> bool:
-        """True if the arena can cover a ``tokens``-long request on top of
-        every outstanding reservation (free blocks minus the lazily-unfilled
-        remainder of other slots' reservations)."""
-        unfilled = self.blocks_reserved - self.blocks_in_use
-        return len(self._free_blocks) - unfilled >= self.blocks_for(tokens)
+    def free_blocks_on(self, device: int) -> int:
+        return len(self._free_blocks[device])
 
-    def allocate(self, reserve_tokens: int = 0) -> int:
-        if not self._free_slots:
-            raise RuntimeError("BlockPagedKVPool exhausted: no free slot")
+    def blocks_in_use_on(self, device: int) -> int:
+        return self.blocks_per_device - len(self._free_blocks[device])
+
+    def reserved_on(self, device: int) -> int:
+        lo = device * self.per_device_slots
+        return int(self._reserved[lo : lo + self.per_device_slots].sum())
+
+    def can_reserve(self, tokens: int, device: int = 0) -> bool:
+        """True if ``device``'s block range can cover a ``tokens``-long
+        request on top of every outstanding reservation there (free blocks
+        minus the lazily-unfilled remainder of its slots' reservations)."""
+        unfilled = self.reserved_on(device) - self.blocks_in_use_on(device)
+        return len(self._free_blocks[device]) - unfilled >= self.blocks_for(tokens)
+
+    def pick_device(self, reserve_tokens: int = 0) -> Optional[int]:
+        """Admission placement: the least-loaded device (most free slots)
+        whose block range can also cover the request's whole-footprint
+        reservation; ties break toward the lowest index.  None when no
+        device can take the request — the FCFS head waits for recycling."""
+        best, best_free = None, 0
+        for d in range(self.num_devices):
+            free = self.free_slots_on(d)
+            if free <= best_free:
+                continue
+            if reserve_tokens and not self.can_reserve(reserve_tokens, d):
+                continue
+            best, best_free = d, free
+        return best
+
+    def allocate(self, reserve_tokens: int = 0,
+                 device: Optional[int] = None) -> int:
         need = self.blocks_for(reserve_tokens)
-        if reserve_tokens and not self.can_reserve(reserve_tokens):
+        slot = self._pop_free_slot(device)
+        # the reservation ledger is per-device, so the check runs against
+        # the device the slot actually landed on (with an explicit device
+        # the engine's pick_device already verified it; a legacy no-device
+        # call checks the FIFO head's device and restores FIFO order on
+        # failure)
+        dev = self.device_of(slot)
+        if reserve_tokens and not self.can_reserve(reserve_tokens, dev):
+            self._free_slots.appendleft(slot)
             raise RuntimeError(
-                f"BlockPagedKVPool exhausted: {need} blocks wanted, "
-                f"{len(self._free_blocks)} free minus "
-                f"{self.blocks_reserved - self.blocks_in_use} reserved"
+                f"BlockPagedKVPool exhausted: {need} blocks wanted on device "
+                f"{dev}, {len(self._free_blocks[dev])} free minus "
+                f"{self.reserved_on(dev) - self.blocks_in_use_on(dev)} reserved"
             )
-        slot = self._free_slots.popleft()
         self._used.add(slot)
         self._slot_blocks[slot] = []
         self._reserved[slot] = need
         self.peak_blocks_reserved = max(self.peak_blocks_reserved, self.blocks_reserved)
+        d = self.device_of(slot)
+        self.peak_reserved_per_device[d] = max(
+            self.peak_reserved_per_device[d], self.reserved_on(d)
+        )
         return slot
 
     def free(self, slot: int) -> None:
         """Recycle a slot and its blocks the tick its request finishes.
-        Blocks return to the FIFO free list in allocation order."""
+        Blocks return to their device's FIFO free list in allocation
+        order (a slot's blocks are all from its own device's range)."""
         if slot not in self._used:
             raise ValueError(f"slot {slot} is not allocated")
         self._used.remove(slot)
         self.positions[slot] = 0
+        dev = self.device_of(slot)
         for b in self._slot_blocks.pop(slot):
-            self._free_blocks.append(b)
+            self._free_blocks[dev].append(b)
         self._reserved[slot] = 0
         self._free_slots.append(slot)
 
@@ -266,13 +445,15 @@ class BlockPagedKVPool:
                 f"{int(self._reserved[slot])}; allocate(reserve_tokens=...) "
                 "must cover the full prompt + decode footprint"
             )
+        dev = self.device_of(slot)
         while len(blocks) < need:
-            if not self._free_blocks:
+            if not self._free_blocks[dev]:
                 raise RuntimeError(
-                    f"BlockPagedKVPool exhausted mid-sequence (slot {slot}): "
-                    "reservation accounting should have prevented this"
+                    f"BlockPagedKVPool exhausted mid-sequence (slot {slot}, "
+                    f"device {dev}): reservation accounting should have "
+                    "prevented this"
                 )
-            b = self._free_blocks.popleft()
+            b = self._free_blocks[dev].popleft()
             self.tables[slot, len(blocks)] = b
             blocks.append(b)
             self.tables_dirty = True

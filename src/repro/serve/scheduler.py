@@ -6,9 +6,12 @@ reached on the engine clock and (b) a KV-cache slot is free.  The engine
 clock is the decode-step counter, so synthetic staggered-arrival workloads
 replay bit-identically — the property every serving test here leans on.
 
-Layering (see ROADMAP.md §Serving):  scheduler (this file, admission policy)
--> kv_cache.SlotKVPool (slot-paged KV/state residency) -> engine
-(ContinuousEngine, the jit-once masked decode loop).
+Layering (see ROADMAP.md §Serving and docs/serving.md):  scheduler (this
+file, admission *order*) -> kv_cache (slot/block KV residency, device
+placement) -> engine (ContinuousEngine, the jit-once fused step).  Under a
+device mesh the scheduler's contract is unchanged — FCFS decides *who* is
+admitted next; the engine + pool decide *where* (least-loaded device's slot
+range), so placement never reorders admissions.
 """
 from __future__ import annotations
 

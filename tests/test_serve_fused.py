@@ -109,6 +109,48 @@ def test_chunk_boundary_greedy_identity(arch):
     assert m["prefill_compilations"] == 0
 
 
+# ------------------------------------------- MoE near-identity (caveat) -----
+def test_moe_chunked_prefill_near_identity_tolerance_pinned():
+    """The one family the fused path does NOT claim bit-identity for: GShard
+    capacity dropping depends on the dispatch group, so chunked prefill can
+    route borderline tokens differently than the monolithic pass and greedy
+    outputs may diverge mid-stream (see docs/serving.md §MoE caveat and the
+    ROADMAP item on capacity-aware chunking).  This pins the caveat as a
+    *bounded* regression instead of prose: the longest-common-prefix
+    fraction vs the static oracle must stay high (measured at PR 4:
+    per-request min 0.70, mean ~0.86 for llama4-scout at smoke scale), and
+    divergence must not break serving (all requests finish, compile
+    counters stay exact).  A capacity-aware chunked prefill should push
+    these floors to 1.0 — ratchet them then."""
+    cfg, model, params = _model_for("llama4-scout-17b-a16e")
+    assert cfg.moe is not None
+    scfg = ServeConfig()
+    reqs = [
+        Request(id=i, tokens=_prompt(cfg, L, seed=400 + i), max_new_tokens=6,
+                arrival_step=i)
+        for i, L in enumerate([5, 9, 14, 7])
+    ]
+    engine = ContinuousEngine(model, params, num_slots=2,
+                              max_seq=required_max_seq(reqs), cfg=scfg, chunk=4)
+    comps = engine.run(reqs)
+    ref = static_reference(model, params, reqs, scfg)
+    assert len(comps) == len(reqs)
+    fracs = []
+    for c in comps:
+        want, got = ref[c.request_id], c.tokens
+        lcp = 0
+        for a, b in zip(got, want):
+            if a != b:
+                break
+            lcp += 1
+        fracs.append(lcp / len(want))
+    assert min(fracs) >= 0.5, f"per-request LCP fractions collapsed: {fracs}"
+    assert float(np.mean(fracs)) >= 0.7, f"mean LCP fraction regressed: {fracs}"
+    m = engine.metrics()
+    assert m["fused_step_compilations"] == 1
+    assert m["prefill_compilations"] == 0
+
+
 # ----------------------------------------------------------- bucketing ------
 def test_pad_to_grid_bounds_and_identity():
     t = np.arange(11, dtype=np.int32)
