@@ -4,13 +4,21 @@ On this CPU container the Pallas kernels execute in interpret mode, so
 wall-times are NOT TPU projections — reported for relative tracking only.
 The structural numbers (VMEM working set per BlockSpec tile, HLO flops and
 bytes of the reference path) are hardware-independent and feed §Perf.
+
+``--paged-only`` runs just the paged-attention read sweep (block_size x
+block horizon, streamed vs gathered) and merges it into the existing
+kernel_bench.json — the CI smoke invocation.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import writeout
 from repro.core.luts import TPU_SOFTMAX_LUT
@@ -45,7 +53,86 @@ def vmem_bytes_attention(bq=128, bk=128, d=128):
     return (bq * d * 2 + 2 * bk * d + bq * bk + 2 * bq * 128) * 4
 
 
-def run() -> dict:
+def paged_sweep() -> dict:
+    """Paged-attention read sweep: streamed (gather-free block-tile scan)
+    vs gathered (full-stream materialization, the PR 3 path) through the
+    SAME block tables, across block_size x block-horizon.  Wall times are
+    CPU-relative only; the HLO ``bytes`` column is the hardware-independent
+    story — the gathered read's traffic carries the materialized
+    (N, H*bs, KV, dh) stream, the streamed read touches each arena tile
+    once per pass.  (The Pallas kernel itself is interpret-checked in
+    tests/test_serve_paged.py; timing it interpreted would measure the
+    interpreter, not the kernel.)"""
+    from repro.configs.registry import get_config, reduce_config
+    from repro.models import attention as attention_mod
+
+    cfg = reduce_config(get_config("internlm2-1.8b"))
+    rng = np.random.default_rng(0)
+    n_slots, chunk, d = 4, 4, cfg.d_model
+    p = {
+        "wq": jnp.asarray(rng.normal(size=(d, cfg.q_features)) * 0.05, jnp.float32),
+        "wk": jnp.asarray(rng.normal(size=(d, cfg.kv_features)) * 0.05, jnp.float32),
+        "wv": jnp.asarray(rng.normal(size=(d, cfg.kv_features)) * 0.05, jnp.float32),
+        "wo": jnp.asarray(rng.normal(size=(cfg.q_features, d)) * 0.05, jnp.float32),
+    }
+    rows = []
+    for bs in (4, 8):
+        for horizon in (2, 8, 16):
+            nb = n_slots * horizon
+            ak = jnp.asarray(
+                rng.normal(size=(nb, bs, cfg.n_kv_heads, cfg.head_dim)),
+                jnp.float32)
+            av = jnp.asarray(
+                rng.normal(size=(nb, bs, cfg.n_kv_heads, cfg.head_dim)),
+                jnp.float32)
+            x = jnp.asarray(rng.normal(size=(n_slots, chunk, d)) * 0.1,
+                            jnp.float32)
+            tables = jnp.asarray(
+                rng.permutation(nb).reshape(n_slots, horizon), jnp.int32)
+            positions = jnp.full((n_slots,), horizon * bs - chunk, jnp.int32)
+            n_valid = jnp.full((n_slots,), chunk, jnp.int32)
+            row = {"block_size": bs, "horizon_blocks": horizon,
+                   "attended_tokens": horizon * bs}
+            for path in ("gathered", "streamed"):
+                attention_mod.FORCE_PAGED_READ = path
+                try:
+                    fn = jax.jit(lambda ak_, av_, x_, pos_, nv_, tb_:
+                                 attention_mod.attn_paged_chunk(
+                                     cfg, p, ak_, av_, x_, pos_, nv_, tb_)[0])
+                    args = (ak, av, x, positions, n_valid, tables)
+                    row[f"{path}_us"] = _time(fn, *args)
+                    cost = fn.lower(*args).compile().cost_analysis()
+                    if isinstance(cost, list):
+                        cost = cost[0]
+                    row[f"{path}_bytes"] = float(cost.get("bytes accessed", 0))
+                    row[f"{path}_flops"] = float(cost.get("flops", 0))
+                finally:
+                    attention_mod.FORCE_PAGED_READ = None
+            row["speedup"] = row["gathered_us"] / row["streamed_us"]
+            rows.append(row)
+    return {"shape": {"n_slots": n_slots, "chunk": chunk,
+                      "kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim},
+            "sweep": rows}
+
+
+def run(paged_only: bool = False) -> dict:
+    if paged_only:
+        # merge into the existing file so the smoke invocation never wipes
+        # the full-suite numbers
+        path = (Path(__file__).resolve().parent.parent / "experiments"
+                / "results" / "kernel_bench.json")
+        out = {}
+        if path.exists():
+            try:
+                out = json.loads(path.read_text())
+            except json.JSONDecodeError:
+                out = {}
+        out["gn_paged_attention"] = paged_sweep()
+        return writeout("kernel_bench", out)
+    return _run_full()
+
+
+def _run_full() -> dict:
     out = {}
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 2048))
     j_ref = jax.jit(lambda v: gn_softmax_ref(v, TPU_SOFTMAX_LUT))
@@ -71,15 +158,37 @@ def run() -> dict:
         **_ref_cost(lambda a, b2, c: gn_attention_ref(a, b2, c, causal=True), q, k, v),
         "vmem_tile_bytes": vmem_bytes_attention(),
     }
+    out["gn_paged_attention"] = paged_sweep()
     return writeout("kernel_bench", out)
 
 
+def _print_paged(sweep: dict):
+    print(f"\npaged read sweep (streamed vs gathered, "
+          f"shape {sweep['shape']}):")
+    print(f"{'bs':>4s} {'horizon':>8s} {'tok':>5s} {'gathered_us':>12s} "
+          f"{'streamed_us':>12s} {'speedup':>8s} {'gath_MB':>8s} {'strm_MB':>8s}")
+    for r in sweep["sweep"]:
+        print(f"{r['block_size']:4d} {r['horizon_blocks']:8d} "
+              f"{r['attended_tokens']:5d} {r['gathered_us']:12.1f} "
+              f"{r['streamed_us']:12.1f} {r['speedup']:8.2f} "
+              f"{r['gathered_bytes']/1e6:8.2f} {r['streamed_bytes']/1e6:8.2f}")
+
+
 def main():
-    rows = run()
-    print(f"{'kernel':14s} {'ref_us':>10s} {'MFLOP':>8s} {'MB':>8s} {'VMEM_KB':>8s}")
-    for k, m in rows.items():
-        print(f"{k:14s} {m['ref_us']:10.1f} {m['flops']/1e6:8.2f} "
-              f"{m['bytes']/1e6:8.2f} {m['vmem_tile_bytes']/1024:8.1f}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paged-only", action="store_true",
+                    help="run just the paged-attention sweep (CI smoke); "
+                         "merges into the existing kernel_bench.json")
+    args = ap.parse_args()
+    rows = run(paged_only=args.paged_only)
+    if not args.paged_only:
+        print(f"{'kernel':14s} {'ref_us':>10s} {'MFLOP':>8s} {'MB':>8s} {'VMEM_KB':>8s}")
+        for k, m in rows.items():
+            if k == "gn_paged_attention":
+                continue
+            print(f"{k:14s} {m['ref_us']:10.1f} {m['flops']/1e6:8.2f} "
+                  f"{m['bytes']/1e6:8.2f} {m['vmem_tile_bytes']/1024:8.1f}")
+    _print_paged(rows["gn_paged_attention"])
 
 
 if __name__ == "__main__":

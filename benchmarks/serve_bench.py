@@ -14,16 +14,18 @@ schema (written to experiments/results/) so future PRs can track the
 serving-throughput trajectory:
 
   {"benchmark": "serve", "arch": ..., "workload": {... incl. "arch",
-                "num_devices"},
+                "num_devices", "read_path"},
    "static": {"wall_s", "cold_wall_s", "tokens_per_s", "batches"},
    "continuous": {"wall_s", "cold_wall_s", "tokens_per_s", "decode_steps",
                   "fused_ticks", "mean_slot_utilization",
                   "prefill_lane_fraction", "chunk", "intake_padding",
                   "decode_compilations", "fused_step_compilations",
-                  "prefill_compilations", "kv_hbm_bytes",
+                  "prefill_compilations", "kv_hbm_bytes", "read_path",
                   "num_devices", "per_device_slots", "shard_balance",
                   + paged: "num_blocks", "block_size", "peak_blocks_in_use",
-                  "peak_blocks_reserved", "block_utilization"},
+                  "peak_blocks_reserved", "block_utilization",
+                  "horizon_bucket_grid", "horizon_buckets",
+                  "mean_attended_tokens_per_tick"},
    "kv": {"paged", "slab_hbm_bytes", "kv_hbm_bytes",
           + paged: "num_blocks", "block_size", "slab_slots_at_equal_hbm",
           "equal_hbm_slots_gain"},
@@ -31,9 +33,18 @@ serving-throughput trajectory:
    "history": [{"git_sha", "arch", "workload_hash", "timestamp", "speedup",
                 "cold_speedup", "tokens_per_s", "prefill_compilations",
                 "decode_compilations", "fused_step_compilations",
-                "kv_hbm_bytes", "num_devices", "per_device_slots",
-                "shard_balance", "num_blocks", "block_utilization",
-                "equal_hbm_slots_gain"}, ...]}
+                "kv_hbm_bytes", "read_path", "num_devices",
+                "per_device_slots", "shard_balance", "num_blocks",
+                "block_utilization", "equal_hbm_slots_gain",
+                "horizon_buckets", "mean_attended_tokens_per_tick"}, ...]}
+
+``read_path`` (gathered / streamed / pallas / slab) is part of the workload
+identity: the gather-free streamed read and the PR 3 gathered read are
+different perf trajectories, so runs on different paths must not share a
+``workload_hash``.  ``horizon_buckets`` and
+``mean_attended_tokens_per_tick`` track horizon bucketing — compile counts
+pinned to one trace per (step kind, bucket), attended width scaling with
+live context instead of max_seq.
 
 ``--devices N`` serves from a slot pool sharded over N devices (slot-axis
 NamedSharding, least-loaded admission placement — see docs/serving.md
@@ -118,7 +129,27 @@ def _load_history() -> list:
 def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         max_new: int = 16, num_slots: int = 0, stagger: int = 1,
         chunk: int = 8, reps: int = 10, tail_len: int = -1,
-        devices: int = 1) -> dict:
+        devices: int = 1, force_read: str = "") -> dict:
+    if not force_read:
+        return _run(arch, n_requests, base_len, max_new, num_slots, stagger,
+                    chunk, reps, tail_len, devices)
+    # pin the paged read path (e.g. --force-read gathered to re-measure the
+    # PR 3 full-stream baseline on the same host as a streamed run;
+    # read_path is folded into workload_hash so the trajectories stay
+    # separate).  The override is process-global, so clear it even when the
+    # run raises — a stuck force would silently relabel every later run.
+    from repro.models import attention as attention_mod
+
+    attention_mod.FORCE_PAGED_READ = force_read
+    try:
+        return _run(arch, n_requests, base_len, max_new, num_slots, stagger,
+                    chunk, reps, tail_len, devices)
+    finally:
+        attention_mod.FORCE_PAGED_READ = None
+
+
+def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
+         chunk, reps, tail_len, devices) -> dict:
     cfg = reduce_config(get_config(arch))
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -224,6 +255,9 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         # part of the workload identity: a 2-device run is a different
         # trajectory than a 1-device run (same precedent as adding arch)
         "num_devices": devices,
+        # likewise the read path: gathered vs streamed vs pallas (vs slab)
+        # are different perf trajectories and must not share a hash
+        "read_path": m["read_path"],
     }
     payload = {
         "benchmark": "serve",
@@ -249,6 +283,7 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
             "fused_step_compilations": m["fused_step_compilations"],
             "prefill_compilations": m["prefill_compilations"],
             "kv_hbm_bytes": m["kv_hbm_bytes"],
+            "read_path": m["read_path"],
             "num_devices": m["num_devices"],
             "per_device_slots": m["per_device_slots"],
             "shard_balance": m["shard_balance"],
@@ -256,7 +291,11 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
                 "block_size": m["block_size"],
                 "peak_blocks_in_use": m["peak_blocks_in_use"],
                 "peak_blocks_reserved": m["peak_blocks_reserved"],
-                "block_utilization": m["block_utilization"]}
+                "block_utilization": m["block_utilization"],
+                "horizon_bucket_grid": m["horizon_bucket_grid"],
+                "horizon_buckets": m["horizon_buckets"],
+                "mean_attended_tokens_per_tick":
+                    m["mean_attended_tokens_per_tick"]}
                if m["kv_paged"] else {}),
         },
         "kv": kv,
@@ -278,6 +317,7 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         "decode_compilations": m["decode_compilations"],
         "fused_step_compilations": m["fused_step_compilations"],
         "kv_hbm_bytes": m["kv_hbm_bytes"],
+        "read_path": m["read_path"],
         "num_devices": m["num_devices"],
         "per_device_slots": m["per_device_slots"],
         "shard_balance": m["shard_balance"],
@@ -285,7 +325,10 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         # the payload's continuous section — nulls read as broken counters
         **({"num_blocks": m["num_blocks"],
             "block_utilization": m["block_utilization"],
-            "equal_hbm_slots_gain": kv["equal_hbm_slots_gain"]}
+            "equal_hbm_slots_gain": kv["equal_hbm_slots_gain"],
+            "horizon_buckets": m["horizon_buckets"],
+            "mean_attended_tokens_per_tick":
+                m["mean_attended_tokens_per_tick"]}
            if m["kv_paged"] else {}),
     })
     payload["history"] = history[-_HISTORY_MAX:]
@@ -305,10 +348,14 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the slot pool over N devices (CPU: export "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--force-read", default="",
+                    choices=["", "gathered", "streamed", "pallas"],
+                    help="pin the paged read path (same-host baseline "
+                         "comparisons; hashed into the workload identity)")
     args = ap.parse_args()
     payload = run(args.arch, args.requests, args.base_len, args.new_tokens,
                   args.num_slots, chunk=args.chunk, tail_len=args.tail_len,
-                  devices=args.devices)
+                  devices=args.devices, force_read=args.force_read)
     print(json.dumps({k: v for k, v in payload.items() if k != "history"},
                      indent=2, default=float))
     s, c = payload["static"], payload["continuous"]
@@ -337,6 +384,10 @@ def main():
               f"{payload['workload']['num_slots']} paged -> "
               f"{kv['equal_hbm_slots_gain']:.1f}x slots "
               f"(peak util {c['block_utilization']*100:.0f}%)")
+        print(f"paged reads: {c['read_path']}; horizon buckets "
+              f"{c['horizon_buckets']} of grid {c['horizon_bucket_grid']}; "
+              f"mean attended {c['mean_attended_tokens_per_tick']:.1f} "
+              "tok/tick")
     else:
         print(f"slot-slab KV (family has no pageable cache): "
               f"{kv['kv_hbm_bytes']/1024:.1f} KiB resident")

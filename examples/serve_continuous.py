@@ -93,7 +93,8 @@ def main():
     print(f"\nserved {m['completions']} requests, {m['generated_tokens']} tokens "
           f"in {dt:.2f}s ({m['generated_tokens']/dt:.1f} tok/s)")
     print(f"slot utilization {m['mean_slot_utilization']*100:.0f}%  "
-          f"fused-step compilations {m['fused_step_compilations']} (jit-once), "
+          f"fused-step compilations {m['fused_step_compilations']} "
+          f"(one per horizon bucket when paged, else jit-once), "
           f"per-length prefill compilations {m['prefill_compilations']}")
     if args.devices > 1:
         print(f"sharded: {m['num_devices']} devices x {m['per_device_slots']} "

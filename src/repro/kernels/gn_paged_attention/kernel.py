@@ -1,13 +1,14 @@
-"""Paged-KV decode attention with online GN-Softmax — Pallas TPU kernel.
+"""Paged-KV chunked-query attention with online GN-Softmax — Pallas TPU kernel.
 
 The serving engine's block-paged KV pool stores each sequence as a chain of
 ``block_size``-token blocks scattered through a shared arena; a per-sequence
 block *table* maps logical block j to its physical arena slot.  This kernel
-streams a decode query over that chain exactly like ``gn_attention`` streams
-over a contiguous row: the k/v BlockSpec index map reads the physical block
-id out of a scalar-prefetched table (so the DMA engine chases the table, no
-gather materialization in HBM), and the (max, sum, acc) carries use the same
-snap-to-Δ-grid stabilizer:
+streams a *chunk* of queries (decode is the chunk=1 special case) over that
+chain exactly like ``gn_attention`` streams over a contiguous row: the k/v
+BlockSpec index map reads the physical block id out of a scalar-prefetched
+table (so the DMA engine chases the table, no gather materialization in
+HBM), and the (max, sum, acc) carries use the same snap-to-Δ-grid
+stabilizer:
 
   * the running max is snapped *up* to the Δ grid, so the online correction
     e^{m_old − m_new} goes through the same LUT unit grid-exactly and the
@@ -16,6 +17,14 @@ snap-to-Δ-grid stabilizer:
     their own sum — Σp = 1 holds to one rounding *independent of the block
     layout*, which is the normalization guarantee the paged pool must not
     break.
+
+Chunked-query contract (the fused serving tick): query row i of sequence n
+sits at absolute position ``starts[n] + i`` and attends the logical stream
+``[0, starts[n] + i]`` — causal *within* the chunk, full prefix before it —
+while KV reads are bounded by ``lengths[n]`` (the post-write context
+``starts + n_valid``), so rows past a slot's valid lane count read nothing
+beyond what the pool actually allocated.  Their outputs are don't-care and
+the caller discards them.
 
 Grid: (n_seqs, q_heads, max_blocks_per_seq), block axis innermost/arbitrary;
 GQA maps k/v to head ``h // group``.  Blocks at or past a sequence's context
@@ -42,8 +51,9 @@ NEG_INF = -1e30
 
 def _gn_paged_attention_kernel(
     tables_ref,  # scalar prefetch: (N, max_bt) int32 physical block ids
-    lens_ref,  # scalar prefetch: (N,) int32 context lengths
-    q_ref,  # (1, 1, bq, d)
+    starts_ref,  # scalar prefetch: (N,) int32 absolute position of q row 0
+    lens_ref,  # scalar prefetch: (N,) int32 post-write context lengths
+    q_ref,  # (1, 1, bq, d) — rows [0, chunk) are the chunk queries
     k_ref,  # (1, 1, bs_p, d) — physical block tables_ref[n, j]
     v_ref,  # (1, 1, bs_p, d)
     coarse_ref,  # (1, 128) exp LUT operand
@@ -61,6 +71,7 @@ def _gn_paged_attention_kernel(
     n = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
+    start = starts_ref[n]
     length = lens_ref[n]
 
     @pl.when(j == 0)
@@ -78,10 +89,14 @@ def _gn_paged_attention_kernel(
         )  # (bq, bs_p)
         bq, bs_p = s.shape
 
-        # mask: absolute position j*block_size + r must be < length, and the
-        # padded tail rows (r >= block_size) of the physical block are inert
+        # mask: query row qi (absolute position start + qi) attends absolute
+        # column j*block_size + r iff the column is causally visible
+        # (col <= start + qi), inside the written context (col < length), and
+        # not in the padded tail rows (r >= block_size) of the physical block
+        qi = jax.lax.broadcasted_iota(jnp.int32, (bq, bs_p), 0)
         r = jax.lax.broadcasted_iota(jnp.int32, (bq, bs_p), 1)
-        mask = (r < block_size) & (j * block_size + r < length)
+        col = j * block_size + r
+        mask = (r < block_size) & (col < length) & (col <= start + qi)
         s = jnp.where(mask, s, NEG_INF)
 
         m_old = m_ref[:, :1]
@@ -125,11 +140,12 @@ def _gn_paged_attention_kernel(
     static_argnames=("cfg", "sm_scale", "block_size", "interpret"),
 )
 def gn_paged_attention_pallas(
-    q: jax.Array,  # (N, H, bq, d) — row 0 is the decode query
+    q: jax.Array,  # (N, H, bq, d) — rows [0, chunk) are the chunk queries
     k_arena: jax.Array,  # (nb, Hkv, bs_p, d)
     v_arena: jax.Array,  # (nb, Hkv, bs_p, d)
     tables: jax.Array,  # (N, max_bt) int32
-    lengths: jax.Array,  # (N,) int32
+    starts: jax.Array,  # (N,) int32 absolute position of query row 0
+    lengths: jax.Array,  # (N,) int32 post-write context lengths
     cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
     sm_scale: float | None = None,
     block_size: int | None = None,
@@ -155,7 +171,7 @@ def gn_paged_attention_pallas(
         block_pad=bs_p - block_size,
     )
 
-    def kv_index(n_, h_, j, tbl, lens):
+    def kv_index(n_, h_, j, tbl, starts_, lens):
         # clamp skipped grid steps (j past the sequence's last valid block)
         # to the last valid logical block: the kernel's pl.when already
         # skips their compute, and a repeated index lets the pipeline elide
@@ -165,17 +181,19 @@ def gn_paged_attention_pallas(
         return (tbl[n_, jnp.minimum(j, last)], h_ // group, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, bq, d), lambda n_, h_, j, tbl, lens: (n_, h_, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, bq, d), lambda n_, h_, j, tbl, starts_, lens: (n_, h_, 0, 0)
+            ),
             pl.BlockSpec((1, 1, bs_p, d), kv_index),
             pl.BlockSpec((1, 1, bs_p, d), kv_index),
-            pl.BlockSpec(coarse.shape, lambda n_, h_, j, tbl, lens: (0, 0)),
-            pl.BlockSpec(residual.shape, lambda n_, h_, j, tbl, lens: (0, 0)),
+            pl.BlockSpec(coarse.shape, lambda n_, h_, j, tbl, starts_, lens: (0, 0)),
+            pl.BlockSpec(residual.shape, lambda n_, h_, j, tbl, starts_, lens: (0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, bq, d), lambda n_, h_, j, tbl, lens: (n_, h_, 0, 0)
+            (1, 1, bq, d), lambda n_, h_, j, tbl, starts_, lens: (n_, h_, 0, 0)
         ),
         scratch_shapes=[
             pltpu.VMEM((bq, d), jnp.float32),
@@ -191,4 +209,4 @@ def gn_paged_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(tables, lengths, q, k_arena, v_arena, coarse, residual)
+    )(tables, starts, lengths, q, k_arena, v_arena, coarse, residual)

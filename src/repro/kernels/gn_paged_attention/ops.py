@@ -1,9 +1,14 @@
-"""Jit'd public wrapper for paged GN decode attention (padding + GQA).
+"""Jit'd public wrappers for paged GN attention (padding + GQA).
 
 Layout contract with the serving pool: the arena arrives in the pool's
-(num_blocks, block_size, KV, dh) layout; this wrapper transposes it to the
-kernel's head-major block layout and lane-pads the head dim, pads the query
-to the 8-row sublane grid, and trims everything back off the output.
+(num_blocks, block_size, KV, dh) layout; these wrappers transpose it to the
+kernel's head-major block layout and lane-pad the head dim, pad the query
+chunk to the 8-row sublane grid, and trim everything back off the output.
+
+``gn_paged_attention_chunk`` is the fused serving tick's entry point: a
+(N, C, H, D) query chunk per sequence, causal within the chunk, the prior
+context read through the block table.  ``gn_paged_attention`` keeps the
+original single-row decode signature as the C=1 special case.
 """
 from __future__ import annotations
 
@@ -26,26 +31,33 @@ def _round_up(x: int, m: int) -> int:
 @functools.partial(
     jax.jit, static_argnames=("cfg", "sm_scale", "interpret")
 )
-def gn_paged_attention(
-    q: jax.Array,  # (N, H, D) one decode query per sequence
+def gn_paged_attention_chunk(
+    q: jax.Array,  # (N, C, H, D) one query chunk per sequence
     k_arena: jax.Array,  # (nb, bs, Hkv, D) — the pool's arena layout
     v_arena: jax.Array,  # (nb, bs, Hkv, D)
     tables: jax.Array,  # (N, max_bt) int32
-    lengths: jax.Array,  # (N,) int32 context lengths
+    starts: jax.Array,  # (N,) int32 absolute position of query row 0
+    n_valid: jax.Array,  # (N,) int32 valid lanes (KV read bound; rows past
+    #                      it produce don't-care outputs)
     cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
     sm_scale: float | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    n, h, d = q.shape
+    """Chunked-query paged read.  Row i of sequence n attends the logical
+    stream [0, starts[n] + i] (causal intra-chunk), bounded by the post-write
+    context starts + n_valid.  Returns (N, C, H, D)."""
+    n, c, h, d = q.shape
     nb, bs, hkv, _ = k_arena.shape
     if sm_scale is None:
         sm_scale = d**-0.5  # scale uses the TRUE head dim, not the padded one
 
     d_p = _round_up(d, LANE)
     bs_p = _round_up(bs, SUBLANE)
+    c_p = _round_up(c, SUBLANE)
 
-    qp = jnp.pad(q, ((0, 0), (0, 0), (0, d_p - d)))[:, :, None]  # (N, H, 1, d_p)
-    qp = jnp.pad(qp, ((0, 0), (0, 0), (0, SUBLANE - 1), (0, 0)))
+    qp = jnp.pad(
+        q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, c_p - c), (0, d_p - d))
+    )  # (N, H, c_p, d_p)
     kp = jnp.pad(
         k_arena.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, bs_p - bs), (0, d_p - d))
     )
@@ -58,10 +70,44 @@ def gn_paged_attention(
         kp,
         vp,
         tables.astype(jnp.int32),
-        lengths.astype(jnp.int32),
+        starts.astype(jnp.int32),
+        (starts + n_valid).astype(jnp.int32),
         cfg=cfg,
         sm_scale=float(sm_scale),
         block_size=bs,
         interpret=interpret,
     )
-    return out[:, :, 0, :d]
+    return out[:, :, :c, :d].transpose(0, 2, 1, 3)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "sm_scale", "interpret")
+)
+def gn_paged_attention(
+    q: jax.Array,  # (N, H, D) one decode query per sequence
+    k_arena: jax.Array,  # (nb, bs, Hkv, D) — the pool's arena layout
+    v_arena: jax.Array,  # (nb, bs, Hkv, D)
+    tables: jax.Array,  # (N, max_bt) int32
+    lengths: jax.Array,  # (N,) int32 context lengths (incl. the new token)
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-row decode read: the C=1 chunk whose query sits at position
+    lengths - 1.  Returns (N, H, D)."""
+    lengths = lengths.astype(jnp.int32)
+    starts = jnp.maximum(lengths - 1, 0)
+    out = gn_paged_attention_chunk(
+        q[:, None],
+        k_arena,
+        v_arena,
+        tables,
+        starts,
+        # empty sequences read nothing (all blocks skipped -> zero output),
+        # exactly like the pre-chunk decode kernel
+        jnp.where(lengths > 0, 1, 0),
+        cfg=cfg,
+        sm_scale=sm_scale,
+        interpret=interpret,
+    )
+    return out[:, 0]

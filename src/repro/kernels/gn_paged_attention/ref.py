@@ -1,12 +1,17 @@
-"""Pure-jnp oracle for the paged GN decode-attention kernel.
+"""Pure-jnp oracles for the paged GN attention kernel.
 
 Semantics: gather each sequence's logical KV stream out of the block arena
 through its block table, then run the one-pass GN-Softmax attention over the
-valid prefix.  The kernel accumulates the *same* LUT'd numerators into both
-the weighted value sum and the denominator block-by-block, so it equals this
-reference up to float associativity — and both normalize by the numerators'
-own sum, so Σp = 1 to one rounding regardless of how the blocks are laid
-out in the arena.
+causally visible prefix.  The kernel accumulates the *same* LUT'd numerators
+into both the weighted value sum and the denominator block-by-block, so it
+equals these references up to float associativity — and both normalize by
+the numerators' own sum, so Σp = 1 to one rounding regardless of how the
+blocks are laid out in the arena.
+
+(The *streamed* block-tile algorithm the serving tick runs on CPU/GPU — the
+same online accumulation as the kernel, in jnp — lives in
+``models/attention.py``; this module is the gathered one-pass oracle both
+are tested against.)
 """
 from __future__ import annotations
 
@@ -40,6 +45,39 @@ def gn_paged_attention_ref(
     s = jnp.where(valid, s, -1e30)
     p = gn_softmax_ref(s, cfg)
     out = jnp.einsum("nht,nthd->nhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gn_paged_attention_chunk_ref(
+    q: jax.Array,  # (N, C, H, D) one query chunk per sequence
+    k_arena: jax.Array,  # (nb, bs, H, D)  (kv heads already broadcast to H)
+    v_arena: jax.Array,  # (nb, bs, H, D)
+    tables: jax.Array,  # (N, max_bt) int32 physical block ids
+    starts: jax.Array,  # (N,) int32 absolute position of query row 0
+    n_valid: jax.Array,  # (N,) int32 valid lanes per sequence
+    sm_scale: float | None = None,
+    cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
+) -> jax.Array:
+    """Chunked-query oracle: row i of sequence n attends the gathered stream
+    [0, starts[n] + i] (causal intra-chunk), bounded by the post-write
+    context starts + n_valid.  Rows past n_valid are don't-care to callers
+    but deterministic (they attend the clipped stream), matching the kernel
+    row for row."""
+    if sm_scale is None:
+        sm_scale = q.shape[-1] ** -0.5
+    n, c = q.shape[:2]
+    k = k_arena[tables].reshape(n, -1, *k_arena.shape[2:])
+    v = v_arena[tables].reshape(n, -1, *v_arena.shape[2:])
+    s = jnp.einsum("nchd,nthd->nhct", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    t = s.shape[-1]
+    col = jnp.arange(t)[None, None, :]  # (1, 1, T)
+    rows = starts[:, None] + jnp.arange(c)[None, :]  # (N, C)
+    lengths = starts + n_valid
+    valid = (col <= rows[:, :, None]) & (col < lengths[:, None, None])
+    s = jnp.where(valid[:, None], s, -1e30)
+    p = gn_softmax_ref(s, cfg)
+    out = jnp.einsum("nhct,nthd->nchd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
 
 

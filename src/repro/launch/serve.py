@@ -107,6 +107,11 @@ def _serve_continuous(model, cfg, params, args, scfg):
           f"{m['decode_compilations']}x, per-prompt-length prefill "
           f"{m['prefill_compilations']}x  (chunk={m['chunk']}, intake "
           f"padding {m['intake_padding']} tok)")
+    if m["kv_paged"]:
+        print(f"paged reads: {m['read_path']}; horizon buckets "
+              f"{m['horizon_buckets']} of grid {m['horizon_bucket_grid']} "
+              f"(mean attended {m['mean_attended_tokens_per_tick']:.1f} "
+              "tok/tick)")
 
     # per-tick slot phase occupancy: the fusion benefit made visible —
     # prefill chunks ride lanes that would otherwise idle while decoding.
@@ -126,12 +131,20 @@ def _serve_continuous(model, cfg, params, args, scfg):
               f"arrive@{c.arrival_step} admit@{c.admit_step} "
               f"finish@{c.finish_step}  latency {c.latency_s*1e3:.0f}ms")
 
-    # Counters are explicit trace counts (always ints).  Every prompt
-    # streams through the fused step, so it must have compiled exactly
-    # once; the decode fast path may be unused (0) when every tick carried
-    # a prefill lane.
-    assert m["fused_step_compilations"] == 1, "fused step recompiled!"
-    assert m["decode_compilations"] in (0, 1), "decode step recompiled!"
+    # Counters are explicit trace counts (always ints).  Slab engines
+    # compile the fused step exactly once (decode fast path may be unused);
+    # paged engines compile once per (step kind, horizon bucket actually
+    # seen), bounded by the bucket grid — see docs/serving.md §Paged read
+    # paths.
+    if m["kv_paged"]:
+        grid = m["horizon_bucket_grid"]
+        assert m["fused_step_compilations"] == len(m["fused_buckets"]) <= len(grid), \
+            "fused step recompiled beyond the bucket bound!"
+        assert m["decode_compilations"] == len(m["decode_buckets"]) <= len(grid), \
+            "decode step recompiled beyond the bucket bound!"
+    else:
+        assert m["fused_step_compilations"] == 1, "fused step recompiled!"
+        assert m["decode_compilations"] in (0, 1), "decode step recompiled!"
     assert m["prefill_compilations"] == 0, "per-prompt-length prefill is back?!"
     if scfg.temperature == 0:
         ref = static_reference(model, params, reqs, scfg)

@@ -232,6 +232,82 @@ def attn_decode_chunk(cfg: ModelConfig, p: dict, cache: dict, x, pos, n_valid):
     return out, {"k": k, "v": v}
 
 
+# Test/bench override for the paged read dispatch below: None (auto) or one
+# of 'pallas' / 'streamed' / 'gathered'.  The gathered path materializes the
+# full logical stream and exists as the identity oracle the streamed paths
+# are pinned against (tests/test_serve_paged.py) — the serving tick itself
+# never takes it unless forced or running an exotic baseline softmax.
+FORCE_PAGED_READ: str | None = None
+
+
+def paged_read_path(cfg: ModelConfig) -> str:
+    """Which paged attention read the serving tick uses for dense KV:
+    'pallas' (TPU kernel, online GN accumulation), 'streamed' (lax.scan
+    over block tiles emitting score tiles — bitwise equal to the gathered
+    read without materializing the K stream), or 'gathered' (full-stream
+    materialization; baselines-only oracle)."""
+    if FORCE_PAGED_READ is not None:
+        return FORCE_PAGED_READ
+    if cfg.use_pallas:
+        return "pallas"
+    # the online accumulation needs a streaming-stable softmax: GN (snap-to-
+    # Δ-grid LUT exp) or the exact float path; one-pass-only baselines fall
+    # back to the gathered oracle
+    return "streamed" if cfg.softmax_impl in ("gn", "exact") else "gathered"
+
+
+def _stream_paged_tiles(cfg: ModelConfig, qg, arena_k, arena_v, tables, rows):
+    """Gather-free dense paged read: lax.scan over block tiles.
+
+    qg: (N, C, KV, G, dh) in activation dtype; arena_k/arena_v:
+    (nb, bs, KV, dh) in cache dtype; tables: (N, H) physical block ids
+    (H = the tick's block horizon — compute and HBM traffic scale with live
+    context, not max_seq); rows: (N, C) absolute positions.
+    Returns (N, C, KV, G, dh) in activation dtype.
+
+    The k scan emits one (.., C, bs) *score* tile per block — each score
+    element is an independent dh-dot of the same operands the gathered read
+    contracts, so the stacked score row is **bitwise identical** to the
+    gathered read's, column for column, without ever materializing the
+    gathered K stream.  The one-pass GN softmax then runs on that row
+    exactly as in the gathered path (identical probabilities, identical
+    Σp = 1 guarantee: masked columns — every stale/foreign table entry
+    included — get exactly-zero numerators), and the weighted-value
+    contraction is the gathered path's own einsum over the horizon-bounded
+    V blocks — so the whole read is **bitwise identical** to the gathered
+    oracle while halving the stream materialization and bounding it by the
+    live horizon.  (One big AV contraction beats a per-tile value scan on
+    every backend tried; the Pallas kernel is the truly stream-resident
+    form — single-pass online (m, l, acc) state, LUT'd corrections,
+    nothing materialized — equivalent up to LUT-entry rounding.)
+    """
+    bs = arena_k.shape[1]
+    scale = cfg.head_dim**-0.5
+    tbls = jnp.moveaxis(tables, 1, 0)  # (H, N)
+    # unroll a constant factor only: full unrolling would make trace/HLO
+    # size linear in the top horizon bucket (512 tiles at max_seq 4096 /
+    # block 8), exactly the compile blow-up horizon bucketing exists to cap
+
+    def k_body(_, tbl_j):  # tbl_j: (N,) physical block id of logical j
+        k_c = arena_k[tbl_j]  # (N, bs, KV, dh)
+        return None, jnp.einsum("bskgd,btkd->bkgst", qg, k_c) * scale
+
+    _, s_tiles = jax.lax.scan(k_body, None, tbls, unroll=8)  # (H, N, KV, G, C, bs)
+    scores = jnp.moveaxis(s_tiles, 0, 4)  # (N, KV, G, C, H, bs)
+    scores = scores.reshape(*scores.shape[:4], -1)  # logical column order
+
+    t = scores.shape[-1]  # horizon * bs, tail masked below
+    valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]  # (N, C, T)
+    scores = jnp.where(valid[:, None, None], scores.astype(jnp.float32), NEG_INF)
+    from repro.core import get_softmax
+
+    n = rows.shape[0]
+    kv, dh = arena_v.shape[2], arena_v.shape[3]
+    v_at = arena_v[tables].reshape(n, -1, kv, dh)  # horizon-bounded V blocks
+    pmat = get_softmax(cfg.softmax_impl)(scores).astype(v_at.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", pmat, v_at)
+
+
 def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
                      n_valid, tables):
     """Block-paged chunked append-decode, batched over slots.
@@ -240,19 +316,26 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
     sequence; here every sequence owns only a *block table* into a shared KV
     arena, so resident HBM scales with live tokens instead of worst-case
     length.  x: (N, C, D); positions/n_valid: (N,) int32 per-slot vectors;
-    tables: (N, max_bt) int32 physical-block ids per logical block;
+    tables: (N, max_bt) int32 physical-block ids per logical block — the
+    engine passes a *horizon-sliced* table (max_bt = the tick's bucketed
+    block horizon), so per-tick attention work is bounded by live context;
     arena_k/arena_v: (num_blocks, block_size, KV, dh).
 
     Lane (s, i) writes absolute position positions[s]+i through the table
     (lanes >= n_valid[s] scatter out of bounds and are dropped — n_valid=0
     drops a whole slot, which is how inactive lanes are kept away from
-    blocks they don't own) and attends the gathered logical stream
+    blocks they don't own) and attends the logical stream
     [0, positions[s]+i].  Table entries past a slot's allocated prefix may
     point at recycled or foreign blocks: every such column sits beyond the
     causal mask, and the GN softmax turns masked scores into *exactly zero*
     numerators (LUT saturation), so stale block contents cannot leak into
     either the weighted sum or the normalizer — Σp = 1 over the same score
     multiset as the slab path, independent of block layout.
+
+    The read itself is dispatched by ``paged_read_path``: the Pallas kernel
+    (TPU; chunked queries included), the streamed block-tile scan (CPU/GPU
+    default — bitwise equal to the gathered read, K stream never
+    materialized), or the gathered oracle (baselines/tests only).
 
     Returns (out (N, C, D), (new arena_k, new arena_v)).
     """
@@ -273,35 +356,51 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
     flat_v = arena_v.reshape(nb * bs, kv, dh)
     flat_k = flat_k.at[dest].set(k_new.reshape(b * c_len, kv, dh).astype(flat_k.dtype), mode="drop")
     flat_v = flat_v.at[dest].set(v_new.reshape(b * c_len, kv, dh).astype(flat_v.dtype), mode="drop")
+    arenas = (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape))
 
-    if cfg.use_pallas and c_len == 1:
+    path = paged_read_path(cfg)
+    group = cfg.n_heads // kv
+    if path == "pallas":
         # single-chip TPU hot path: the Pallas kernel chases the block table
         # with scalar-prefetched index maps instead of materializing the
         # gathered stream (interpret-mode on CPU); same GN datapath, tiled.
-        from repro.kernels.gn_paged_attention.ops import gn_paged_attention
+        # Chunked queries ride the same kernel (causal intra-chunk mask).
+        from repro.kernels.gn_paged_attention.ops import gn_paged_attention_chunk
 
         interp = jax.devices()[0].platform != "tpu"
-        out = gn_paged_attention(
-            q.reshape(b, cfg.n_heads, cfg.head_dim),
+        out = gn_paged_attention_chunk(
+            q,
             flat_k.reshape(nb, bs, kv, dh),
             flat_v.reshape(nb, bs, kv, dh),
             tables,
-            rows[:, 0] + 1,
+            positions,
+            n_valid,
             interpret=interp,
-        ).reshape(b, 1, cfg.q_features)
+        ).reshape(b, c_len, cfg.q_features)
         out = jnp.einsum("bsf,fd->bsd", out.astype(dt), p["wo"].astype(dt))
-        return out, (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape))
+        return out, arenas
 
-    # gather each slot's logical KV stream back out of the arena (post-write,
-    # so the chunk's own keys are already in place — no side concat needed)
+    if path == "streamed":
+        qg = q.reshape(b, c_len, kv, group, dh)
+        out = _stream_paged_tiles(
+            cfg, qg,
+            flat_k.reshape(nb, bs, kv, dh), flat_v.reshape(nb, bs, kv, dh),
+            tables, rows,
+        ).reshape(b, c_len, cfg.q_features)
+        out = jnp.einsum("bsf,fd->bsd", out.astype(dt), p["wo"].astype(dt))
+        return out, arenas
+
+    # gathered oracle: materialize each slot's logical KV stream (post-write,
+    # so the chunk's own keys are already in place — no side concat needed).
+    # Tests pin the streamed paths against this; the tick never runs it
+    # unless forced or serving a one-pass-only baseline softmax.
     k_at = flat_k.reshape(nb, bs, kv, dh)[tables].reshape(b, -1, kv, dh)
     v_at = flat_v.reshape(nb, bs, kv, dh)[tables].reshape(b, -1, kv, dh)
-    t = k_at.shape[1]  # max_bt * bs >= max_seq, tail masked below
+    t = k_at.shape[1]  # horizon * bs, tail masked below
 
     valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]  # (N, C, T)
     mask = valid[:, None, None]  # broadcast over (kv, group)
 
-    group = cfg.n_heads // kv
     qg = q.reshape(b, c_len, kv, group, cfg.head_dim)
     scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_at) * (cfg.head_dim**-0.5)
     scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
@@ -310,7 +409,7 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
     pmat = get_softmax(cfg.softmax_impl)(scores).astype(v_at.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", pmat, v_at).reshape(b, c_len, cfg.q_features)
     out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
-    return out, (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape))
+    return out, arenas
 
 
 def paged_write_indices(rows, n_valid, tables, block_size: int, num_blocks: int):

@@ -174,15 +174,88 @@ def mla_decode_chunk(cfg: ModelConfig, p: dict, cache: dict, x, pos, n_valid):
     return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 
+def mla_paged_read_path(cfg: ModelConfig) -> str:
+    """Which paged read the MLA serving tick uses: 'streamed' (block-tile
+    scan expanding the latent per tile — gather-free) or 'gathered' (full
+    logical-stream materialization; baselines-only oracle).  There is no
+    Pallas MLA kernel — the latent expansion keeps the hot loop a matmul."""
+    from repro.models import attention
+
+    if attention.FORCE_PAGED_READ in ("streamed", "gathered"):
+        return attention.FORCE_PAGED_READ
+    # a forced 'pallas' falls through to the auto choice: there is no MLA
+    # kernel, and the reported path must always be the one that actually ran
+    return "streamed" if cfg.softmax_impl in ("gn", "exact") else "gathered"
+
+
+def _mla_stream_tiles(cfg: ModelConfig, p: dict, q_nope, q_rope, arena_ckv,
+                      arena_krope, tables, rows):
+    """Gather-free MLA paged read: lax.scan over latent block tiles.
+
+    Each k-scan step expands ONE (N, bs) latent tile through wkv_b and emits
+    its score tile (score decomposition q_nope·k_nope + q_rope·k_rope, the
+    same expression ``_attend`` evaluates on the gathered stream — each
+    element is an independent rank/head-dim contraction, so the stacked
+    score row is bitwise identical to the gathered read's) plus the
+    expanded value tile.  The one-pass GN softmax runs on the stacked row
+    exactly as in ``_attend`` (identical probabilities, exactly-zero
+    numerators on every masked/stale column), and the weighted-value
+    contraction is ``_attend``'s own einsum over the stacked tiles — the
+    whole read is bitwise identical to the gathered path.  Nothing wider
+    than the tick's block horizon — tables arrives horizon-sliced from the
+    engine — is ever resident, and the gathered latent stream itself is
+    never materialized (the expansion is computed per tile from the
+    arenas).
+    Returns (N, C, h·v_head_dim) in activation dtype."""
+    dt = q_nope.dtype
+    m = cfg.mla
+    h = cfg.n_heads
+    n, c = rows.shape
+    bs = arena_ckv.shape[1]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    tbls = jnp.moveaxis(tables, 1, 0)  # (H, N)
+
+    def k_body(_, tbl_j):  # tbl_j: (N,) physical block id of logical j
+        c_tile = arena_ckv[tbl_j]  # (N, bs, rank)
+        kv = jnp.einsum("btr,rf->btf", c_tile.astype(dt), p["wkv_b"].astype(dt))
+        kv = kv.reshape(n, bs, h, m.qk_nope_head_dim + m.v_head_dim)
+        k_nope = kv[..., : m.qk_nope_head_dim]
+        v_tile = kv[..., m.qk_nope_head_dim :]
+        r_tile = arena_krope[tbl_j].astype(dt)  # (N, bs, dr)
+        s = (
+            jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+            + jnp.einsum("bshd,btd->bhst", q_rope, r_tile)
+        ) * scale
+        return None, (s, v_tile)
+
+    _, (s_tiles, v_tiles) = jax.lax.scan(k_body, None, tbls, unroll=8)
+    scores = jnp.moveaxis(s_tiles, 0, 3)  # (N, h, C, H, bs)
+    scores = scores.reshape(*scores.shape[:3], -1)  # logical column order
+
+    t = scores.shape[-1]  # horizon * bs, tail masked below
+    valid = (jnp.arange(t)[None, None, :] <= rows[:, :, None])[:, None]
+    scores = jnp.where(valid, scores.astype(jnp.float32), NEG_INF)
+    pmat = get_softmax(cfg.softmax_impl)(scores).astype(dt)
+    # the expanded value tiles in logical column order, horizon-bounded —
+    # one AV contraction, bitwise equal to _attend's
+    v_at = jnp.moveaxis(v_tiles, 0, 1).reshape(n, -1, h, m.v_head_dim)
+    out = jnp.einsum("bhst,bthd->bshd", pmat, v_at)
+    return out.reshape(n, c, h * m.v_head_dim)
+
+
 def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
                     positions, n_valid, tables):
     """Block-paged chunked append-decode over the latent cache, batched over
     slots (see attention.paged ``attn_paged_chunk`` for the table/guard
-    contract).  x: (N, C, D); positions/n_valid: (N,); tables: (N, max_bt);
-    arena_ckv: (num_blocks, block_size, kv_lora_rank); arena_krope:
-    (num_blocks, block_size, qk_rope_head_dim).  MLA's compressed latent is
-    what makes paging cheap here: a block holds block_size * (rank + rope)
-    scalars instead of full per-head KV.  Returns (out, (new arenas))."""
+    contract).  x: (N, C, D); positions/n_valid: (N,); tables: (N, max_bt) —
+    horizon-sliced by the engine, so the read scans only the tick's live
+    block horizon; arena_ckv: (num_blocks, block_size, kv_lora_rank);
+    arena_krope: (num_blocks, block_size, qk_rope_head_dim).  MLA's
+    compressed latent is what makes paging cheap here: a block holds
+    block_size * (rank + rope) scalars instead of full per-head KV.  The
+    read is streamed per block tile (``mla_paged_read_path``); the gathered
+    full-stream path survives as the baselines/tests oracle.
+    Returns (out, (new arenas))."""
     from repro.models.attention import paged_write_indices
 
     b, c_len = x.shape[:2]
@@ -196,13 +269,23 @@ def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
     flat_r = arena_krope.reshape(nb * bs, -1)
     flat_c = flat_c.at[dest].set(c_new.reshape(b * c_len, -1).astype(flat_c.dtype), mode="drop")
     flat_r = flat_r.at[dest].set(kr_new.reshape(b * c_len, -1).astype(flat_r.dtype), mode="drop")
+    arenas = (flat_c.reshape(arena_ckv.shape), flat_r.reshape(arena_krope.shape))
+
+    if mla_paged_read_path(cfg) == "streamed":
+        out = _mla_stream_tiles(
+            cfg, p, q_nope, q_rope,
+            flat_c.reshape(nb, bs, -1), flat_r.reshape(nb, bs, -1),
+            tables, rows,
+        )  # (N, C, h*dv) in activation dtype
+        dt = x.dtype
+        return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt)), arenas
 
     c_kv = flat_c.reshape(nb, bs, -1)[tables].reshape(b, -1, flat_c.shape[-1])
     k_rope = flat_r.reshape(nb, bs, -1)[tables].reshape(b, -1, flat_r.shape[-1])
     t = c_kv.shape[1]
     mask = (jnp.arange(t)[None, None, :] <= rows[:, :, None])[:, None]  # (N,1,C,T)
     out = _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)
-    return out, (flat_c.reshape(arena_ckv.shape), flat_r.reshape(arena_krope.shape))
+    return out, arenas
 
 
 def mla_decode_step(cfg: ModelConfig, p: dict, cache: dict, x, pos):

@@ -636,6 +636,17 @@ class Model:
 
     # ------------------------------------------------- block-paged cache ---
     @property
+    def paged_read_path(self) -> str:
+        """How the serving tick reads paged KV for this family: 'pallas'
+        (dense TPU kernel), 'streamed' (block-tile scan, the CPU/GPU
+        default) or 'gathered' (full-stream oracle, baselines only).  The
+        engine surfaces this in ``metrics()`` and the bench folds it into
+        the workload hash so trajectories don't mix read paths."""
+        if self.cfg.mla is not None:
+            return mla_mod.mla_paged_read_path(self.cfg)
+        return attn.paged_read_path(self.cfg)
+
+    @property
     def supports_paging(self) -> bool:
         """Block-granular KV paging applies to the families whose per-layer
         cache is a full-attention KV (dense/moe/encdec/vlm) or MLA latent

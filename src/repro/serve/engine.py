@@ -24,7 +24,11 @@ Two paths share the per-family caches from ``models/transformer.py``:
   (``BlockPagedKVPool``: dense/moe/encdec/vlm full-attention KV, MLA
   latents — HBM scales with live tokens, admission gates on free blocks);
   SSM/hybrid carries and sliding-window rings keep the slot-monolithic
-  ``SlotKVPool``.
+  ``SlotKVPool``.  Paged reads are gather-free and *horizon-bucketed*:
+  each tick slices the traced block tables to the smallest power-of-two
+  bucket covering the live block horizon, so attention work scales with
+  live context while compile counts stay pinned to one trace per (step
+  kind, bucket) — see docs/serving.md §Paged read paths.
 
   ``devices=N`` shards the slot pool over an N-device mesh along the
   slot/batch axis (slot-axis NamedSharding from parallel/sharding.py's
@@ -278,6 +282,21 @@ class ContinuousEngine:
                 block_size=block_size or self.chunk, num_blocks=num_blocks,
                 mesh=self.mesh, num_devices=self.num_devices,
             )
+            # Horizon-bucket grid: each paged tick slices the traced block
+            # tables to the smallest bucket covering the *active block
+            # horizon* (max blocks any live slot holds), so attention
+            # compute/HBM traffic scales with live tokens while the jit
+            # cache stays pinned — one compilation per (step kind, bucket),
+            # i.e. fused <= len(grid) and decode <= len(grid) instead of
+            # one tick shape per horizon.  Powers of two up to
+            # max_blocks_per_slot, which caps the grid at
+            # ceil(log2(max_bt)) + 1 entries.
+            grid, b = [], 1
+            while b < self.pool.max_blocks_per_slot:
+                grid.append(b)
+                b *= 2
+            grid.append(self.pool.max_blocks_per_slot)
+            self.horizon_bucket_grid: list[int] = grid
         else:
             if block_size or num_blocks:
                 raise ValueError(
@@ -295,7 +314,10 @@ class ContinuousEngine:
         # copying it every tick (~20% off a smoke-scale decode tick); the
         # engine immediately rebinds each donated input to the returned
         # value, so no stale reference survives.  Block tables are NOT
-        # donated — the host mirror stays authoritative.
+        # donated — the host mirror stays authoritative.  Paged steps
+        # re-trace once per horizon bucket (the tables argument's width):
+        # compile counts are bounded by len(horizon_bucket_grid) per step
+        # kind, not 1 — CountingJit still reports the exact totals.
         if self.paged:
             self._decode = CountingJit(self._decode_sample_paged,
                                        donate_argnums=(1, 2, 3, 6))
@@ -354,6 +376,10 @@ class ContinuousEngine:
         self._lanes_dirty = True
         if self.paged:
             self._tables_dev = self._put(jnp.asarray(self.pool.tables), self._sh_row)
+            # per-bucket slices of the device tables, rebuilt lazily when
+            # residency grows — steady-state ticks reuse the cached slice
+            # instead of dispatching a device slice every tick
+            self._tables_sliced: dict[int, jax.Array] = {}
             self.pool.tables_dirty = False
         self._key = self._put(jax.random.PRNGKey(self.cfg.seed), self._sh_rep)
         self.step_count = 0
@@ -364,6 +390,12 @@ class ContinuousEngine:
         self._prefill_lane_steps = 0  # sum over ticks of prefilling slots
         self._generated = 0
         self.phase_log: list[tuple[int, int]] = []  # (prefill, decode) lanes/tick
+        # horizon bucketing (paged): raw active horizon + bucket per tick,
+        # the bucket sets each step kind has been traced at (the exact
+        # compile-count bound), and the summed attended-token width
+        self.horizon_log: list[tuple[int, int]] = []  # (horizon, bucket)/tick
+        self._buckets_seen: dict[str, set] = {"fused": set(), "decode": set()}
+        self._attended_tokens = 0  # sum over ticks of bucket * block_size
         self._device_admits = np.zeros(self.num_devices, np.int64)
         self.scheduler = scheduler or FCFSScheduler(chunk_grid=self.chunk)
 
@@ -615,6 +647,7 @@ class ContinuousEngine:
         for s in prefills:
             st = self._slots[s]
             takes[s] = min(self.chunk, st.req.prompt_len - st.written)
+        paged_args = ()
         if self.paged:
             # allocate blocks for the positions this tick will write, then
             # refresh the device table mirror only if residency grew
@@ -624,8 +657,22 @@ class ContinuousEngine:
                 self._tables_dev = self._put(
                     jnp.asarray(self.pool.tables), self._sh_row
                 )
+                self._tables_sliced.clear()
                 self.pool.tables_dirty = False
-        paged_args = (self._tables_dev,) if self.paged else ()
+            # Horizon bucketing: slice the traced tables to the smallest
+            # grid bucket covering the live block horizon, so the paged
+            # reads (streamed tiles / kernel grid) touch only live context.
+            # A new bucket is a new tick shape -> one extra compilation,
+            # bounded by len(horizon_bucket_grid) per step kind.
+            horizon = self.pool.active_horizon_blocks()
+            bucket = next(b for b in self.horizon_bucket_grid if b >= horizon)
+            self._buckets_seen["fused" if prefills else "decode"].add(bucket)
+            self.horizon_log.append((horizon, bucket))
+            self._attended_tokens += bucket * self.pool.block_size
+            sliced = self._tables_sliced.get(bucket)
+            if sliced is None:
+                sliced = self._tables_sliced[bucket] = self._tables_dev[:, :bucket]
+            paged_args = (sliced,)
         if prefills:
             chunk_toks = np.zeros((self.num_slots, self.chunk), np.int32)
             n_valid = np.ones(self.num_slots, np.int32)
@@ -728,7 +775,11 @@ class ContinuousEngine:
             "completions": len(self.completions),
             "chunk": self.chunk,
             "intake_padding": getattr(self.scheduler, "intake_padding", 0),
-            # CountingJit: always ints (one trace == one compilation)
+            # CountingJit: always ints (one trace == one compilation).
+            # Slab pools: fused=1 / decode<=1.  Paged pools: exactly one
+            # trace per (step kind, horizon bucket actually seen) — i.e.
+            # len(fused_buckets) / len(decode_buckets), bounded by
+            # len(horizon_bucket_grid) each.
             "decode_compilations": self._decode.compilations,
             "fused_step_compilations": self._fused.compilations,
             # chunked prefill rides the fused step: _length_prefills stays
@@ -756,5 +807,24 @@ class ContinuousEngine:
                 block_utilization=(
                     self.pool.peak_blocks_in_use / max(1, self.pool.num_blocks)
                 ),
+                # which gather-free read the tick ran (pallas/streamed;
+                # 'gathered' only under a forced/baseline fallback) and the
+                # horizon-bucketing trajectory: the grid, the buckets each
+                # step kind actually traced (compile counters are exactly
+                # one per (kind, bucket) -> the documented upper bound),
+                # and the mean attended stream width per tick — the
+                # quantity that now scales with live tokens, not max_seq
+                read_path=self.model.paged_read_path,
+                horizon_bucket_grid=list(self.horizon_bucket_grid),
+                horizon_buckets=sorted(
+                    self._buckets_seen["fused"] | self._buckets_seen["decode"]
+                ),
+                fused_buckets=sorted(self._buckets_seen["fused"]),
+                decode_buckets=sorted(self._buckets_seen["decode"]),
+                mean_attended_tokens_per_tick=(
+                    self._attended_tokens / max(1, self._decode_steps)
+                ),
             )
+        else:
+            out["read_path"] = "slab"
         return out

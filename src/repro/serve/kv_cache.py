@@ -427,6 +427,17 @@ class BlockPagedKVPool(_SlotRanges):
         self._free_slots.append(slot)
 
     # --------------------------------------------------------- block tables --
+    def active_horizon_blocks(self) -> int:
+        """Max blocks any live slot holds right now — the tick's *active
+        block horizon*.  The engine buckets this to a small power-of-two
+        grid and slices the traced block tables down to it, so per-tick
+        attention work (streamed tiles / kernel grid steps) is bounded by
+        live context instead of ceil(max_seq / block_size).  0 when no slot
+        holds blocks."""
+        if not self._slot_blocks:
+            return 0
+        return max((len(b) for b in self._slot_blocks.values()), default=0)
+
     def ensure(self, slot: int, position: int) -> None:
         """Grow ``slot``'s block table to cover positions [0, position).
         Called by the engine before each tick for the positions that tick

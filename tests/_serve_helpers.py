@@ -1,0 +1,29 @@
+"""Shared assertions for the serving test modules.
+
+The compile-counter contract changed shape in the horizon-bucketing PR:
+slab engines still compile each step at most once, but paged engines now
+re-trace once per (step kind, horizon bucket actually seen) — the traced
+block-table argument is sliced to the tick's bucketed block horizon, so a
+new bucket is a new tick shape.  The counters stay *exact* (CountingJit),
+just bounded by the bucket grid instead of pinned to 1; this helper is the
+single place that bound is written down.
+"""
+
+
+def assert_exact_compile_counters(m: dict) -> None:
+    assert m["prefill_compilations"] == 0
+    if m.get("kv_paged"):
+        grid = m["horizon_bucket_grid"]
+        # exactly one trace per (step kind, bucket seen), never more than
+        # the grid allows
+        assert m["fused_step_compilations"] == len(m["fused_buckets"])
+        assert m["decode_compilations"] == len(m["decode_buckets"])
+        assert len(m["fused_buckets"]) <= len(grid)
+        assert len(m["decode_buckets"]) <= len(grid)
+        assert set(m["horizon_buckets"]) <= set(grid)
+        assert m["horizon_buckets"] == sorted(
+            set(m["fused_buckets"]) | set(m["decode_buckets"])
+        )
+    else:
+        assert m["fused_step_compilations"] == (1 if m["fused_ticks"] else 0)
+        assert m["decode_compilations"] in (0, 1)

@@ -5,8 +5,9 @@ Pinned invariants:
      the static oracle for the dense and MLA families, across block sizes
      {chunk, 2*chunk}, with churn (fewer slots than requests -> finished
      requests recycle their blocks for later admits);
-  2. compile counters are exact ints (no nulls) and stay fused=1 / decode=1
-     / prefill=0 across >= 4 distinct prompt lengths;
+  2. compile counters are exact ints (no nulls): exactly one trace per
+     (step kind, horizon bucket actually seen), bounded by the power-of-two
+     bucket grid, prefill=0 — regardless of the prompt-length mix;
   3. block-table bookkeeping: on-demand growth, whole-request reservation
      admission (a request waits for *blocks*, not just a slot), FIFO
      recycling, and full drain back to an empty arena;
@@ -15,7 +16,12 @@ Pinned invariants:
      the causal mask + exactly-zero GN numerators, no zeroing needed;
   5. the paged GN attention kernel preserves the paper's guarantee: Sigma p
      = 1 to one rounding through an arbitrary block layout, and matches the
-     contiguous gn_attention reference on an identity table.
+     contiguous gn_attention reference on an identity table — decode AND
+     chunked-query forms, across block sizes {chunk, 2*chunk};
+  6. the gather-free streamed read (serving default) is greedy
+     token-identical to the gathered full-stream oracle for dense and MLA,
+     and per-tick attended width under horizon bucketing stays below the
+     full max_bt stream.
 """
 import jax
 import jax.numpy as jnp
@@ -25,13 +31,22 @@ import pytest
 from repro.configs.registry import get_config, reduce_config
 from repro.data.synthetic import DataConfig, batch_at
 from repro.kernels.gn_attention.ref import gn_attention_ref
-from repro.kernels.gn_paged_attention.ops import gn_paged_attention
-from repro.kernels.gn_paged_attention.ref import gn_paged_attention_ref
+from repro.kernels.gn_paged_attention.ops import (
+    gn_paged_attention,
+    gn_paged_attention_chunk,
+)
+from repro.kernels.gn_paged_attention.ref import (
+    gn_paged_attention_chunk_ref,
+    gn_paged_attention_ref,
+)
+from repro.models import attention as attention_mod
 from repro.models.transformer import make_model
 from repro.serve.engine import ContinuousEngine, ServeConfig, static_reference
 from repro.serve.kv_cache import BlockPagedKVPool
 from repro.serve.scheduler import Request
 from repro.serve.workload import required_max_seq
+
+from _serve_helpers import assert_exact_compile_counters
 
 CHUNK = 4
 
@@ -83,10 +98,10 @@ def test_paged_identity_vs_static_oracle(dense, mla, family, block_size):
     for c in comps:
         assert np.array_equal(c.tokens, ref[c.request_id]), f"req {c.request_id}"
     m = engine.metrics()
-    # explicit trace counters: exact ints, never None
-    assert m["fused_step_compilations"] == 1
-    assert m["decode_compilations"] in (0, 1)
-    assert m["prefill_compilations"] == 0
+    # explicit trace counters: exact ints, never None — one per (step kind,
+    # horizon bucket) under horizon bucketing
+    assert_exact_compile_counters(m)
+    assert m["read_path"] == "streamed"
     # the workload drained: every block is back on the free list
     assert engine.pool.blocks_in_use == 0
     assert engine.pool.num_free == engine.pool.num_slots
@@ -259,3 +274,168 @@ def test_paged_softmax_rows_sum_to_one():
     p = gn_paged_softmax_ref(masked)
     np.testing.assert_allclose(np.asarray(p).sum(-1), 1.0, atol=2e-6)
     assert float(np.asarray(p)[:, 29:].max()) == 0.0  # guard: exact zeros
+
+
+# --------------------------------------- streamed vs gathered read paths ----
+@pytest.mark.parametrize("family", ["dense", "mla"])
+def test_streamed_read_token_identical_to_gathered_oracle(dense, mla, family):
+    """The gather-free streamed read (the serving default) must produce the
+    same greedy tokens as the full-stream gathered oracle — which PR 3
+    proved slab-equal — for dense AND MLA.  Fresh engines per path: the
+    forced read is baked in at trace time."""
+    cfg, model, params = dense if family == "dense" else mla
+    scfg = ServeConfig()
+    reqs = _mixed_requests(cfg)
+    results = {}
+    for path in ("gathered", "streamed"):
+        attention_mod.FORCE_PAGED_READ = path
+        try:
+            engine = ContinuousEngine(model, params, num_slots=2,
+                                      max_seq=required_max_seq(reqs),
+                                      cfg=scfg, chunk=CHUNK)
+            assert engine.model.paged_read_path == path
+            results[path] = {c.request_id: c.tokens for c in engine.run(reqs)}
+        finally:
+            attention_mod.FORCE_PAGED_READ = None
+    assert results["gathered"].keys() == results["streamed"].keys()
+    for rid in results["gathered"]:
+        assert np.array_equal(results["streamed"][rid],
+                              results["gathered"][rid]), f"req {rid}"
+
+
+def test_slab_engine_reports_slab_read_path(dense):
+    _, model, params = dense
+    engine = ContinuousEngine(model, params, num_slots=1, max_seq=16,
+                              paged=False)
+    assert engine.metrics()["read_path"] == "slab"
+
+
+# ------------------------------------------------- horizon bucketing --------
+def test_horizon_bucketing_compile_bounds_and_attended_width(dense):
+    """Compile counters under horizon bucketing: exactly one trace per
+    (step kind, bucket actually seen), bucket grid = powers of two capped
+    at max_blocks_per_slot, and the mean attended width per tick must sit
+    strictly below the full max_bt stream on a mixed-length workload (the
+    whole point: per-tick work scales with live context)."""
+    cfg, model, params = dense
+    scfg = ServeConfig()
+    reqs = _mixed_requests(cfg)
+    engine = ContinuousEngine(model, params, num_slots=2,
+                              max_seq=required_max_seq(reqs), cfg=scfg,
+                              chunk=CHUNK, block_size=CHUNK)
+    grid = engine.horizon_bucket_grid
+    max_bt = engine.pool.max_blocks_per_slot
+    # powers of two, strictly increasing, capped at max_bt
+    assert grid[-1] == max_bt
+    assert all(b < b2 for b, b2 in zip(grid, grid[1:]))
+    assert all(b & (b - 1) == 0 for b in grid[:-1])
+    comps = engine.run(reqs)
+    assert len(comps) == len(reqs)
+    m = engine.metrics()
+    assert_exact_compile_counters(m)
+    assert m["horizon_buckets"]  # at least one bucket was traced
+    # every tick's horizon fits its bucket, and never exceeds the grid cap
+    for horizon, bucket in engine.horizon_log:
+        assert horizon <= bucket <= max_bt
+        assert bucket in grid
+    # live-context scaling: the mixed workload spends most ticks well below
+    # the full stream, so the mean attended width must be < max_bt * bs
+    full = max_bt * engine.pool.block_size
+    assert 0 < m["mean_attended_tokens_per_tick"] < full
+
+
+# ---------------------------------------- chunked-query paged GN kernel -----
+def _chunk_kernel_inputs(seed=0, bs=4):
+    rng = np.random.default_rng(seed)
+    n, c, h, kv, d = 3, CHUNK, 4, 2, 16
+    nb = 12
+    max_bt = -(-32 // bs)  # cover 32 tokens of context
+    q = jnp.asarray(rng.normal(size=(n, c, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(nb, bs, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(nb, bs, kv, d)), jnp.float32)
+    tables = jnp.asarray(rng.integers(0, nb, size=(n, max_bt)), jnp.int32)
+    starts = jnp.asarray([9, 0, 17], jnp.int32)
+    n_valid = jnp.asarray([c, c - 1, c], jnp.int32)
+    return q, k, v, tables, starts, n_valid, h // kv
+
+
+@pytest.mark.parametrize("block_size", [CHUNK, 2 * CHUNK])
+def test_chunked_query_kernel_matches_gathered_chunk_ref(block_size):
+    q, k, v, tables, starts, n_valid, group = _chunk_kernel_inputs(bs=block_size)
+    got = gn_paged_attention_chunk(q, k, v, tables, starts, n_valid,
+                                   interpret=True)
+    kb = jnp.repeat(k, group, axis=2)
+    vb = jnp.repeat(v, group, axis=2)
+    want = gn_paged_attention_chunk_ref(q, kb, vb, tables, starts, n_valid)
+    # online (single-pass) accumulation vs the one-pass reference: equal up
+    # to LUT-entry rounding of the correction factors, not bitwise
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+@pytest.mark.parametrize("block_size", [CHUNK, 2 * CHUNK])
+def test_chunked_query_kernel_matches_contiguous_gn_attention_ref(block_size):
+    # identity table -> each sequence's chunk must reproduce the contiguous
+    # gn_attention reference over its causal prefix (kv span = start + C)
+    q, k, v, tables, starts, n_valid, group = _chunk_kernel_inputs(bs=block_size)
+    n, c, h, d = q.shape
+    max_bt = tables.shape[1]
+    tables = jnp.broadcast_to(jnp.arange(max_bt, dtype=jnp.int32), (n, max_bt))
+    got = gn_paged_attention_chunk(q, k, v, tables, starts,
+                                   jnp.full_like(starts, c), interpret=True)
+    kb = jnp.repeat(k, group, axis=2).reshape(-1, h, d).transpose(1, 0, 2)
+    vb = jnp.repeat(v, group, axis=2).reshape(-1, h, d).transpose(1, 0, 2)
+    for i in range(n):
+        t = int(starts[i]) + c
+        want = gn_attention_ref(
+            q[i].transpose(1, 0, 2)[None], kb[None, :, :t], vb[None, :, :t],
+            causal=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.asarray(want[0]).transpose(1, 0, 2),
+            atol=2e-4,
+        )
+
+
+@pytest.mark.parametrize("block_size", [CHUNK, 2 * CHUNK])
+def test_chunked_query_kernel_sum_to_one_through_block_table(block_size):
+    # v = 1 turns the output into Sigma p * 1: guaranteed normalization must
+    # survive chunked queries and any block layout to one rounding
+    q, k, v, tables, starts, n_valid, _ = _chunk_kernel_inputs(seed=5,
+                                                               bs=block_size)
+    out = gn_paged_attention_chunk(q, k, jnp.ones_like(v), tables, starts,
+                                   n_valid, interpret=True)
+    c = q.shape[1]
+    lane_ok = np.arange(c)[None, :] < np.asarray(n_valid)[:, None]
+    np.testing.assert_allclose(np.asarray(out)[lane_ok], 1.0, atol=1e-5)
+
+
+def test_paged_chunk_pallas_read_matches_gathered(dense):
+    """Wiring test for the 'pallas' read path: a single attn_paged_chunk
+    call (chunked queries, interpret mode on CPU) must agree with the
+    gathered read through the same arenas to kernel tolerance."""
+    cfg, _, _ = dense
+    rng = np.random.default_rng(7)
+    n, c_len, d_model = 2, CHUNK, cfg.d_model
+    nb, bs = 8, CHUNK
+    p = {
+        "wq": jnp.asarray(rng.normal(size=(d_model, cfg.q_features)) * 0.05, jnp.float32),
+        "wk": jnp.asarray(rng.normal(size=(d_model, cfg.kv_features)) * 0.05, jnp.float32),
+        "wv": jnp.asarray(rng.normal(size=(d_model, cfg.kv_features)) * 0.05, jnp.float32),
+        "wo": jnp.asarray(rng.normal(size=(cfg.q_features, d_model)) * 0.05, jnp.float32),
+    }
+    ak = jnp.asarray(rng.normal(size=(nb, bs, cfg.n_kv_heads, cfg.head_dim)), jnp.float32)
+    av = jnp.asarray(rng.normal(size=(nb, bs, cfg.n_kv_heads, cfg.head_dim)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, c_len, d_model)) * 0.1, jnp.float32)
+    tables = jnp.asarray(rng.permutation(nb)[: 2 * 4].reshape(n, 4), jnp.int32)
+    positions = jnp.asarray([6, 1], jnp.int32)
+    n_valid = jnp.asarray([c_len, c_len], jnp.int32)
+    outs = {}
+    for path in ("gathered", "pallas"):
+        attention_mod.FORCE_PAGED_READ = path
+        try:
+            out, _ = attention_mod.attn_paged_chunk(
+                cfg, p, ak, av, x, positions, n_valid, tables)
+        finally:
+            attention_mod.FORCE_PAGED_READ = None
+        outs[path] = np.asarray(out)
+    np.testing.assert_allclose(outs["pallas"], outs["gathered"], atol=5e-4)
