@@ -94,7 +94,11 @@ from repro.serve.engine import (
     static_reference,
 )
 from repro.serve.kv_cache import tree_bytes
-from repro.serve.workload import required_max_seq, staggered_requests
+from repro.serve.workload import (
+    required_max_seq,
+    shared_prefix_requests,
+    staggered_requests,
+)
 
 _RESULTS = Path(__file__).resolve().parent.parent / "experiments" / "results"
 _HISTORY_MAX = 200  # keep the trajectory bounded
@@ -124,6 +128,24 @@ def _load_history() -> list:
         except (json.JSONDecodeError, OSError):
             return []
     return []
+
+
+def _upsert_history(history: list, row: dict) -> list:
+    """Dedupe history on (git_sha, workload_hash, arch, read_path): a re-run
+    of the same workload at the same commit overwrites its old row *in
+    place* (position preserved — the trajectory stays chronological by first
+    appearance) instead of appending a duplicate.  Different SHAs, archs,
+    workloads or read paths never collide, so genuine trajectory points are
+    all kept."""
+    key = (row.get("git_sha"), row.get("workload_hash"),
+           row.get("arch"), row.get("read_path"))
+    for i, old in enumerate(history):
+        if (old.get("git_sha"), old.get("workload_hash"),
+                old.get("arch"), old.get("read_path")) == key:
+            history[i] = row
+            return history
+    history.append(row)
+    return history
 
 
 def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
@@ -304,7 +326,7 @@ def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
         "greedy_token_identical": identical,
     }
     history = _load_history()
-    history.append({
+    _upsert_history(history, {
         "git_sha": _git_sha(),
         "arch": arch,
         "workload_hash": _workload_hash(workload),
@@ -335,9 +357,195 @@ def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
     return writeout("BENCH_serve", payload)
 
 
+# ------------------------------------------------------ shared-prefix scenario
+def run_shared_prefix(arch: str = "internlm2-1.8b", n_users: int = 16,
+                      n_personas: int = 4, system_len: int = 64,
+                      persona_len: int = 16, user_len: int = 8,
+                      max_new: int = 8, num_slots: int = 0, stagger: int = 4,
+                      chunk: int = 8, reps: int = 5, devices: int = 1,
+                      force_read: str = "") -> dict:
+    """The prefix-sharing headline: N users x M personas over one common
+    system prompt, served twice on the same host — prefix cache OFF
+    (baseline) and ON — and compared on `prefix_hit_rate`, cold-TTFT (wall
+    seconds AND deterministic admit->first-token engine steps: with cached
+    prefixes, prefill shrinks to the unshared tail) and
+    `equal_hbm_slots_gain` (each engine re-run on an arena cut to its own
+    peak block residency; sharing dedupes the common prefix so the ON arena
+    is smaller at the same slot count).  Greedy outputs of BOTH engines are
+    checked token-identical to the static unshared oracle.  History rows
+    carry scenario="shared-prefix" and hash separately from the default
+    workload."""
+    if force_read:
+        from repro.models import attention as attention_mod
+
+        attention_mod.FORCE_PAGED_READ = force_read
+        try:
+            return run_shared_prefix(arch, n_users, n_personas, system_len,
+                                     persona_len, user_len, max_new, num_slots,
+                                     stagger, chunk, reps, devices)
+        finally:
+            attention_mod.FORCE_PAGED_READ = None
+    cfg = reduce_config(get_config(arch))
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = shared_prefix_requests(cfg, n_users=n_users, n_personas=n_personas,
+                                  system_len=system_len, persona_len=persona_len,
+                                  user_len=user_len, max_new_tokens=max_new,
+                                  stagger=stagger, seed=11)
+    num_slots = round_slots_to_devices(num_slots or max(2, n_users // 3), devices)
+    max_seq = required_max_seq(reqs)
+    useful = sum(r.max_new_tokens for r in reqs)
+
+    scfg = ServeConfig()
+    jax.block_until_ready(jnp.zeros(()) + 1)
+    ref = static_reference(model, params, reqs, scfg)
+
+    def _ttft(comps):
+        steps = [c.first_token_step - c.admit_step for c in comps]
+        secs = [c.ttft_s for c in comps]
+        return float(np.mean(steps)), float(np.mean(secs))
+
+    engines, cold, sides = {}, {}, {}
+    for name, on in (("off", False), ("on", True)):
+        t0 = time.time()
+        eng = ContinuousEngine(model, params, num_slots=num_slots,
+                               max_seq=max_seq, cfg=scfg, chunk=chunk,
+                               devices=devices, prefix_cache=on)
+        comps = eng.run(reqs)
+        cold[name] = time.time() - t0
+        ttft_steps, ttft_s = _ttft(comps)
+        assert all(np.array_equal(c.tokens, ref[c.request_id]) for c in comps), \
+            f"prefix_cache={on}: continuous output diverged from the oracle"
+        engines[name] = eng
+        sides[name] = {"cold_wall_s": cold[name],
+                       "cold_ttft_steps": ttft_steps, "cold_ttft_s": ttft_s}
+
+    # warm interleaved reps (same rationale as _run: integrate host noise
+    # out of the ratio); reset replays identical hit/evict sequences
+    totals = {"off": 0.0, "on": 0.0}
+    warm_ttft: dict[str, list] = {"off": [], "on": []}
+    for _ in range(reps):
+        for name, eng in engines.items():
+            eng.reset()
+            t0 = time.time()
+            comps = eng.run(reqs)
+            totals[name] += time.time() - t0
+            warm_ttft[name].append(_ttft(comps))
+    for name, eng in engines.items():
+        m = eng.metrics()
+        sides[name].update(
+            wall_s=totals[name] / reps,
+            tokens_per_s=useful / (totals[name] / reps),
+            mean_ttft_steps=float(np.mean([t[0] for t in warm_ttft[name]])),
+            mean_ttft_s=float(np.mean([t[1] for t in warm_ttft[name]])),
+            decode_steps=m["decode_steps"],
+            fused_ticks=m["fused_ticks"],
+            decode_compilations=m["decode_compilations"],
+            fused_step_compilations=m["fused_step_compilations"],
+            prefill_compilations=m["prefill_compilations"],
+            peak_blocks_in_use=m["peak_blocks_in_use"],
+        )
+        if name == "on":
+            sides[name].update(
+                prefix_hit_rate=m["prefix_hit_rate"],
+                prefix_hit_requests=m["prefix_hit_requests"],
+                prefix_forks=m["prefix_forks"],
+                prefix_evictions=m["prefix_evictions"],
+                prefix_cached_blocks=m["prefix_cached_blocks"],
+            )
+        # equal-HBM: re-run on an arena cut to this engine's own peak block
+        # residency per device (reservations under-count ON-side residency
+        # — cached chains belong to no reservation — so the cut uses
+        # peak_used_per_device).  Sharing dedupes the common prefix, so the
+        # ON arena is smaller for the same slots -> a larger slots gain.
+        tight_blocks = int(eng.pool.peak_used_per_device.max()) * devices
+        tight = ContinuousEngine(model, params, num_slots=num_slots,
+                                 max_seq=max_seq, cfg=scfg, chunk=chunk,
+                                 num_blocks=tight_blocks, devices=devices,
+                                 prefix_cache=(name == "on"))
+        comps = tight.run(reqs)  # prove the tight arena serves (evicting)
+        assert all(np.array_equal(c.tokens, ref[c.request_id]) for c in comps), \
+            f"{name}: tight-arena output diverged from the oracle"
+        per_slot_slab_bytes = tree_bytes(model.cache_specs(1, max_seq))
+        hbm = tight.pool.hbm_bytes()
+        slab_slots = int(hbm // per_slot_slab_bytes)
+        sides[name].update(
+            tight_num_blocks=tight_blocks,
+            kv_hbm_bytes=hbm,
+            slab_slots_at_equal_hbm=slab_slots,
+            equal_hbm_slots_gain=num_slots / max(1, slab_slots),
+        )
+
+    m_on = engines["on"].metrics()
+    workload = {
+        "scenario": "shared-prefix",
+        "arch": arch,
+        "n_users": n_users,
+        "n_personas": n_personas,
+        "system_len": system_len,
+        "persona_len": persona_len,
+        "user_len": user_len,
+        "max_new_tokens": max_new,
+        "arrival_stagger": stagger,
+        "num_slots": num_slots,
+        "chunk": chunk,
+        "num_devices": devices,
+        "read_path": m_on["read_path"],
+    }
+    payload = {
+        "benchmark": "serve",
+        "scenario": "shared-prefix",
+        "arch": arch,
+        "workload": workload,
+        "baseline": sides["off"],   # prefix cache off, same host/run
+        "prefix": sides["on"],
+        "speedup": sides["off"]["wall_s"] / sides["on"]["wall_s"],
+        "cold_ttft_steps_speedup": (
+            sides["off"]["cold_ttft_steps"] / max(1e-9, sides["on"]["cold_ttft_steps"])
+        ),
+        "equal_hbm_gain_ratio": (
+            sides["on"]["equal_hbm_slots_gain"]
+            / max(1e-9, sides["off"]["equal_hbm_slots_gain"])
+        ),
+        "greedy_token_identical": True,  # asserted above, both engines
+    }
+    history = _load_history()
+    _upsert_history(history, {
+        "git_sha": _git_sha(),
+        "arch": arch,
+        "scenario": "shared-prefix",
+        "workload_hash": _workload_hash(workload),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "read_path": m_on["read_path"],
+        "num_devices": devices,
+        "greedy_token_identical": True,
+        "prefix_hit_rate": sides["on"]["prefix_hit_rate"],
+        "prefix_forks": sides["on"]["prefix_forks"],
+        "prefix_evictions": sides["on"]["prefix_evictions"],
+        "cold_ttft_steps_on": sides["on"]["cold_ttft_steps"],
+        "cold_ttft_steps_off": sides["off"]["cold_ttft_steps"],
+        "cold_ttft_steps_speedup": payload["cold_ttft_steps_speedup"],
+        "cold_ttft_s_on": sides["on"]["cold_ttft_s"],
+        "cold_ttft_s_off": sides["off"]["cold_ttft_s"],
+        "equal_hbm_slots_gain_on": sides["on"]["equal_hbm_slots_gain"],
+        "equal_hbm_slots_gain_off": sides["off"]["equal_hbm_slots_gain"],
+        "tokens_per_s": sides["on"]["tokens_per_s"],
+        "speedup": payload["speedup"],
+        "decode_compilations": sides["on"]["decode_compilations"],
+        "fused_step_compilations": sides["on"]["fused_step_compilations"],
+        "prefill_compilations": sides["on"]["prefill_compilations"],
+    })
+    payload["history"] = history[-_HISTORY_MAX:]
+    return writeout("BENCH_serve", payload)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b", choices=list_archs())
+    ap.add_argument("--scenario", default="default",
+                    choices=["default", "shared-prefix"],
+                    help="'shared-prefix': N users x M personas over a "
+                         "common system prompt, prefix cache on vs off")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--base-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -352,7 +560,42 @@ def main():
                     choices=["", "gathered", "streamed", "pallas"],
                     help="pin the paged read path (same-host baseline "
                          "comparisons; hashed into the workload identity)")
+    # shared-prefix scenario shape (ignored for --scenario default)
+    ap.add_argument("--users", type=int, default=16)
+    ap.add_argument("--personas", type=int, default=4)
+    ap.add_argument("--system-len", type=int, default=64)
+    ap.add_argument("--persona-len", type=int, default=16)
+    ap.add_argument("--user-len", type=int, default=8)
+    ap.add_argument("--stagger", type=int, default=4)
     args = ap.parse_args()
+    if args.scenario == "shared-prefix":
+        payload = run_shared_prefix(
+            args.arch, n_users=args.users, n_personas=args.personas,
+            system_len=args.system_len, persona_len=args.persona_len,
+            user_len=args.user_len, max_new=args.new_tokens,
+            num_slots=args.num_slots, stagger=args.stagger, chunk=args.chunk,
+            devices=args.devices, force_read=args.force_read,
+        )
+        base, pre = payload["baseline"], payload["prefix"]
+        print(json.dumps({k: v for k, v in payload.items() if k != "history"},
+                         indent=2, default=float))
+        print(f"\nprefix hit rate {pre['prefix_hit_rate']*100:.0f}% "
+              f"({pre['prefix_hit_requests']} hit requests, "
+              f"{pre['prefix_forks']} COW forks, "
+              f"{pre['prefix_evictions']} evictions)")
+        print(f"cold TTFT  {base['cold_ttft_steps']:.1f} -> "
+              f"{pre['cold_ttft_steps']:.1f} engine steps "
+              f"({payload['cold_ttft_steps_speedup']:.2f}x; wall "
+              f"{base['cold_ttft_s']*1e3:.0f} -> {pre['cold_ttft_s']*1e3:.0f} ms)")
+        print(f"equal-HBM  {base['equal_hbm_slots_gain']:.1f}x -> "
+              f"{pre['equal_hbm_slots_gain']:.1f}x slots vs slab "
+              f"(arena {base['tight_num_blocks']} -> "
+              f"{pre['tight_num_blocks']} blocks at {payload['workload']['num_slots']} slots)")
+        print(f"warm wall  {base['wall_s']:.2f}s -> {pre['wall_s']:.2f}s "
+              f"({payload['speedup']:.2f}x)  token-identical="
+              f"{payload['greedy_token_identical']}  "
+              f"(history: {len(payload['history'])} runs)")
+        return
     payload = run(args.arch, args.requests, args.base_len, args.new_tokens,
                   args.num_slots, chunk=args.chunk, tail_len=args.tail_len,
                   devices=args.devices, force_read=args.force_read)

@@ -15,8 +15,16 @@ reports per-device occupancy and admission balance.  This is a CPU demo at
 reduced config, so the script forces N host-platform devices itself before
 jax initializes — no env var needed.
 
+``--shared-prefix`` switches the workload to N users over one common system
+prompt + a few persona preambles (see ``shared_prefix_requests``) and turns
+the radix prefix cache on: the timeline then annotates each admission with
+the blocks it attached from the cache (``hit req3: 18tok/4blk+fork``) and
+the epilogue reports hit rate, COW forks and evictions — watch later
+arrivals skip straight to decoding their unshared tail.
+
 Run:  PYTHONPATH=src python examples/serve_continuous.py [--arch internlm2-1.8b]
       PYTHONPATH=src python examples/serve_continuous.py --devices 2
+      PYTHONPATH=src python examples/serve_continuous.py --shared-prefix
 """
 import argparse
 import time
@@ -37,7 +45,11 @@ from repro.serve.engine import (
     round_slots_to_devices,
     static_reference,
 )
-from repro.serve.workload import required_max_seq, staggered_requests
+from repro.serve.workload import (
+    required_max_seq,
+    shared_prefix_requests,
+    staggered_requests,
+)
 
 
 def main():
@@ -48,25 +60,37 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the slot pool over N (forced host) devices")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="shared system-prompt workload + radix prefix cache")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch))
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    reqs = staggered_requests(cfg, n_requests=args.requests, base_len=16,
-                              max_new_tokens=args.new_tokens, stagger=2, seed=3)
+    if args.shared_prefix:
+        reqs = shared_prefix_requests(cfg, n_users=args.requests, n_personas=3,
+                                      system_len=24, persona_len=10, user_len=6,
+                                      max_new_tokens=args.new_tokens, stagger=4,
+                                      seed=3)
+    else:
+        reqs = staggered_requests(cfg, n_requests=args.requests, base_len=16,
+                                  max_new_tokens=args.new_tokens, stagger=2,
+                                  seed=3)
     num_slots = round_slots_to_devices(args.num_slots, args.devices)
     engine = ContinuousEngine(model, params, num_slots=num_slots,
                               max_seq=required_max_seq(reqs), cfg=ServeConfig(),
-                              devices=args.devices)
+                              devices=args.devices,
+                              prefix_cache=args.shared_prefix)
     for r in reqs:
         engine.submit(r)
 
-    print(f"{args.requests} requests / {num_slots} slots "
+    kind = "shared-prefix " if args.shared_prefix else ""
+    print(f"{args.requests} {kind}requests / {num_slots} slots "
           f"on {args.devices} device(s) "
           f"(prompt lens {sorted({r.prompt_len for r in reqs})}, "
           f"max_new {sorted({r.max_new_tokens for r in reqs})})\n")
     done = 0
+    seen_hits = 0
     pds = num_slots // args.devices
     t0 = time.time()
     while engine.step():
@@ -85,8 +109,19 @@ def main():
         occ = engine.device_occupancy()
         dev = f"  per-device {occ}" if args.devices > 1 else ""
         fin = " ".join(f"req{c.request_id}[{c.finish_reason}]" for c in newly)
+        # prefix-cache hits land at admission: blocks attached read-only
+        # from the radix cache (+fork = a partial block was COW-forked)
+        hits = list(engine.request_prefix_hits.items())[seen_hits:]
+        seen_hits += len(hits)
+        hit = " ".join(
+            f"hit req{rid}: {h['tokens']}tok/{h['blocks']}blk"
+            + ("+fork" if h["forked"] else "")
+            for rid, h in hits
+        )
         print(f"step {engine.step_count - 1:3d}  slots [{marks}] "
-              f"active={live}{dev}" + (f"  finished: {fin}" if fin else ""))
+              f"active={live}{dev}"
+              + (f"  {hit}" if hit else "")
+              + (f"  finished: {fin}" if fin else ""))
     dt = time.time() - t0
 
     m = engine.metrics()
@@ -100,6 +135,12 @@ def main():
         print(f"sharded: {m['num_devices']} devices x {m['per_device_slots']} "
               f"slots — admissions/device {m['device_admits']}, "
               f"balance {m['shard_balance']:.2f} (1.0 = perfectly even)")
+    if args.shared_prefix:
+        print(f"prefix cache: hit rate {m['prefix_hit_rate']*100:.0f}% "
+              f"({m['prefix_hit_tokens']}/{m['prefix_prompt_tokens']} prompt "
+              f"tokens), {m['prefix_hit_requests']} hit requests, "
+              f"{m['prefix_forks']} COW forks, {m['prefix_evictions']} "
+              f"evictions, {m['prefix_cached_blocks']} blocks retained")
     lat = [c.latency_s for c in engine.completions]
     print(f"latency p50 {np.median(lat)*1e3:.0f}ms  max {max(lat)*1e3:.0f}ms")
 

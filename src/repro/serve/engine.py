@@ -61,6 +61,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.transformer import Model
 from repro.parallel.sharding import make_slot_mesh
 from repro.serve.kv_cache import BlockPagedKVPool, SlotKVPool
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import Completion, FCFSScheduler, Request, pad_to_grid
 
 
@@ -232,7 +233,8 @@ class ContinuousEngine:
                  cfg: ServeConfig = ServeConfig(),
                  scheduler: Optional[FCFSScheduler] = None,
                  chunk: int = 8, block_size: int = 0, num_blocks: int = 0,
-                 devices: int = 1, paged: Optional[bool] = None):
+                 devices: int = 1, paged: Optional[bool] = None,
+                 prefix_cache: bool = False):
         self.model, self.params, self.cfg = model, params, cfg
         self.num_slots, self.max_seq = int(num_slots), int(max_seq)
         self.chunk = int(chunk)
@@ -297,7 +299,27 @@ class ContinuousEngine:
                 b *= 2
             grid.append(self.pool.max_blocks_per_slot)
             self.horizon_bucket_grid: list[int] = grid
+            # Prefix sharing (opt-in): a per-device radix index over finished
+            # prompt prefixes.  Admission attaches fully-matched cached
+            # blocks read-only (refcount++), COW-forks a partially-matched
+            # tail, charges the reservation only for the unshared remainder,
+            # and prefill starts at the shared length — cold-TTFT drops to
+            # the unshared tail.  Off by default: a retaining cache keeps
+            # blocks resident after drain, which the non-sharing pool
+            # invariants (blocks_in_use == 0) deliberately forbid.
+            self.prefix = (
+                PrefixCache(self.pool.block_size, self.num_devices)
+                if prefix_cache else None
+            )
+            if self.prefix is not None:
+                self.pool.attach_prefix_cache(self.prefix)
         else:
+            if prefix_cache:
+                raise ValueError(
+                    f"family {model.cfg.family!r} has no pageable KV; "
+                    "prefix_cache shares paged blocks"
+                )
+            self.prefix = None
             if block_size or num_blocks:
                 raise ValueError(
                     f"family {model.cfg.family!r} has no pageable KV; "
@@ -397,7 +419,15 @@ class ContinuousEngine:
         self._buckets_seen: dict[str, set] = {"fused": set(), "decode": set()}
         self._attended_tokens = 0  # sum over ticks of bucket * block_size
         self._device_admits = np.zeros(self.num_devices, np.int64)
-        self.scheduler = scheduler or FCFSScheduler(chunk_grid=self.chunk)
+        # prefix-sharing telemetry (pool.reset() already cleared the radix
+        # index itself, so a reset engine replays identical hit sequences)
+        self._prefix_hit_tokens = 0
+        self._prefix_prompt_tokens = 0
+        self._prefix_hit_requests = 0
+        self.request_prefix_hits: dict[int, dict] = {}
+        self.scheduler = scheduler or FCFSScheduler(
+            chunk_grid=self.chunk, prefix_cache=self.prefix
+        )
 
     # ---------------------------------------------------------- jitted step --
     def _pin(self, x, sharding):
@@ -568,14 +598,35 @@ class ContinuousEngine:
                     f"arena shard has {self.pool.max_request_blocks} — "
                     "unservable at any occupancy"
                 )
-            device = self.pool.pick_device(footprint if self.paged else 0)
+            # Prefix lookup before placement: a hit pulls the request toward
+            # the device already holding its prefix blocks (chains are
+            # device-local), provided that device can still take it; the
+            # reservation then charges only the unshared tail.  Misses (and
+            # hits whose device is full) fall through to least-loaded.
+            hit = device = None
+            if self.prefix is not None:
+                # cap at prompt_len - 1: the sampled first token needs the
+                # request's own final prompt position to run through prefill
+                hit = self.prefix.lookup(head.tokens, cap=head.prompt_len - 1)
+                if hit is not None:
+                    d = hit.device
+                    if (self.pool.free_slots_on(d)
+                            and self.pool.can_reserve(footprint, d, prefix=hit)):
+                        device = d
+                    else:
+                        hit = None
+            if device is None:
+                device = self.pool.pick_device(footprint if self.paged else 0)
             if device is None:
                 break  # admit on free *blocks*: FCFS head waits for recycling
             req = self.scheduler.pop_ready(self.step_count)
             slot = (
-                self.pool.allocate(reserve_tokens=footprint, device=device)
+                self.pool.allocate(reserve_tokens=footprint, device=device,
+                                   prefix=hit)
                 if self.paged else self.pool.allocate(device=device)
             )
+            if hit is not None:
+                self.pool.attach_prefix(slot, hit)
             self._device_admits[device] += 1
             fresh = self._fresh_cache
             if self._encode_cross is not None:
@@ -585,23 +636,67 @@ class ContinuousEngine:
                 dt = jnp.dtype(self.model.cfg.dtype)
                 fresh = {**fresh,
                          "patches": jnp.asarray(req.extras["patches"])[None].astype(dt)}
-            self.pool.insert(fresh, slot, position=0)
+            shared = hit.shared_len if hit is not None else 0
+            self.pool.insert(fresh, slot, position=shared)
             padded = req.padded_tokens
-            if padded is None or padded.shape[0] % self.chunk:
+            if shared:
+                # prefill starts at the shared length, so the chunk slices
+                # run [shared + k*chunk : ... + chunk): re-pad the prompt to
+                # cover the last (possibly overhanging) slice — grid-aligned
+                # padding from intake can be too short when ``shared`` is
+                # not chunk-aligned
+                need = shared + -(-(req.prompt_len - shared) // self.chunk) * self.chunk
+                if padded is None or padded.shape[0] < need:
+                    toks = np.asarray(req.tokens, np.int32)
+                    padded = np.concatenate(
+                        [toks, np.zeros(need - toks.shape[0], np.int32)]
+                    )
+                self._prefix_hit_tokens += shared
+                self._prefix_hit_requests += 1
+                self.request_prefix_hits[req.id] = {
+                    "tokens": shared,
+                    "blocks": len(hit.blocks),
+                    "forked": hit.tail_src is not None,
+                    "device": hit.device,
+                }
+            elif padded is None or padded.shape[0] % self.chunk:
                 padded = pad_to_grid(req.tokens, self.chunk)
+            if self.prefix is not None:
+                self._prefix_prompt_tokens += req.prompt_len
             temp = self.cfg.temperature if req.temperature is None else req.temperature
             self._temps[slot] = float(temp)
             self._slots[slot] = _SlotState(
                 req=req, admit_step=self.step_count,
                 admit_time=time.time(), generated=[],
-                phase="prefilling", padded=padded, written=0,
+                phase="prefilling", padded=padded, written=shared,
             )
             self._lanes_dirty = True
             admitted.append(req.id)
         return admitted
 
+    def _prefix_insert(self, slot: int, up_to: int) -> None:
+        """Index ``slot``'s prompt prefix [0, up_to) in the radix cache.
+        Called at prefill completion (full prompt blocks — from then on the
+        owner writes only at decode positions, in later blocks) and again at
+        finish with the partial prompt tail (the owner is gone; the decode
+        tokens sharing that block sit beyond every sharer's causal mask, and
+        GN maps masked columns to exactly-zero numerators).  Generated
+        tokens are never indexed — sharing only prompt-position KV keeps
+        greedy identity vs the unshared oracle exact by construction."""
+        if up_to <= 0:
+            return
+        self.prefix.insert(
+            np.asarray(self._slots[slot].req.tokens[:up_to], np.int32),
+            self.pool.chain_of(slot)[: self.pool.blocks_for(up_to)],
+            self.pool.device_of(slot),
+        )
+
     def _finish(self, slot: int, reason: str) -> None:
         st = self._slots[slot]
+        if self.prefix is not None and st.written == st.req.prompt_len:
+            bs = self.pool.block_size
+            if st.req.prompt_len % bs:
+                self._prefix_insert(slot, st.req.prompt_len)
         now = time.time()
         self.completions.append(Completion(
             request_id=st.req.id,
@@ -653,6 +748,11 @@ class ContinuousEngine:
             # refresh the device table mirror only if residency grew
             for s in live:
                 self.pool.ensure(s, int(self.pool.positions[s]) + takes.get(s, 1))
+                if self.prefix is not None:
+                    # COW assertion: the block this tick's first write lands
+                    # in must be privately owned (attach-time forking makes
+                    # shared-block writes impossible by construction)
+                    self.pool.write_barrier(s, int(self.pool.positions[s]))
             if self.pool.tables_dirty:
                 self._tables_dev = self._put(
                     jnp.asarray(self.pool.tables), self._sh_row
@@ -711,6 +811,9 @@ class ContinuousEngine:
             st.written += takes[slot]
             if st.written == st.req.prompt_len:
                 st.phase = "decoding"  # first token samples next tick
+                if self.prefix is not None:
+                    bs = self.pool.block_size
+                    self._prefix_insert(slot, (st.req.prompt_len // bs) * bs)
         for slot in decoders:
             st = self._slots[slot]
             tok = int(toks[slot])
@@ -824,7 +927,24 @@ class ContinuousEngine:
                 mean_attended_tokens_per_tick=(
                     self._attended_tokens / max(1, self._decode_steps)
                 ),
+                prefix_cache=self.prefix is not None,
             )
+            if self.prefix is not None:
+                out.update(
+                    # token-weighted: cached prompt tokens / admitted prompt
+                    # tokens — the bench's headline hit metric
+                    prefix_hit_rate=(
+                        self._prefix_hit_tokens
+                        / max(1, self._prefix_prompt_tokens)
+                    ),
+                    prefix_hit_tokens=self._prefix_hit_tokens,
+                    prefix_prompt_tokens=self._prefix_prompt_tokens,
+                    prefix_hit_requests=self._prefix_hit_requests,
+                    prefix_forks=self.pool.prefix_forks,
+                    prefix_evictions=self.pool.prefix_evictions,
+                    prefix_cached_blocks=self.pool.cached_blocks,
+                    prefix_inserts=self.prefix.inserts,
+                )
         else:
             out["read_path"] = "slab"
         return out

@@ -266,6 +266,22 @@ class BlockPagedKVPool(_SlotRanges):
     causal mask, and the GN softmax maps masked scores to exactly-zero
     numerators, so stale contents are unreachable (the sampled-reset replay
     test in tests/test_serve_paged.py pins this).
+
+    Prefix sharing (``attach_prefix_cache``): every block carries a host
+    refcount.  A slot owns the blocks ``ensure`` popped for it (refcount 1),
+    *attaches* cached full blocks from a ``PrefixCache`` hit (refcount++,
+    read-only — the same GN mask guarantee that makes recycled blocks safe
+    makes a block readable through any number of tables), and the cache
+    itself holds one reference per indexed block.  A block returns to its
+    device's FIFO free list only when its refcount reaches zero, so
+    recycling order is unchanged whenever nothing is shared.  Reservations
+    charge a request only for its *unshared* tail
+    (``blocks_for(footprint) - attached``), and a partially-shared block is
+    copy-on-write forked into a private block at attach time — before the
+    request's first divergent write ever happens (``write_barrier`` asserts
+    no live slot writes a refcount>1 block).  Under block pressure
+    ``_pop_block`` reclaims LRU cache-only chains (refcount == 1) before
+    declaring exhaustion.
     """
 
     def __init__(self, model, num_slots: int, max_seq: int,
@@ -297,6 +313,8 @@ class BlockPagedKVPool(_SlotRanges):
         self.tables = np.zeros((self.num_slots, self.max_blocks_per_slot), np.int32)
         self.tables_dirty = True
         self._insert = jax.jit(model.insert_cache_slot_extras, donate_argnums=(0,))
+        self.prefix_cache = None  # bound by attach_prefix_cache
+        self._fork_jit = None  # lazy: one trace total (src/dst are traced)
         self.reset()
 
     # ------------------------------------------------------------ residency --
@@ -318,12 +336,25 @@ class BlockPagedKVPool(_SlotRanges):
         self._used: set[int] = set()
         self._slot_blocks: dict[int, list[int]] = {}
         self._reserved = np.zeros(self.num_slots, np.int32)  # blocks, whole-request
+        # refcounts: owner allocation = 1, each sharing attach and each
+        # prefix-cache index entry +1; a block recycles only at zero
+        self.refcounts = np.zeros(self.num_blocks, np.int32)
+        self._shared = np.zeros(self.num_slots, np.int32)  # attached (not owned)
+        self._owned = np.zeros(self.num_slots, np.int32)   # popped for this slot
+        self.prefix_forks = 0
+        self.prefix_evictions = 0
         self.peak_blocks_in_use = 0
         self.peak_blocks_reserved = 0
         # per-device reservation peaks: the bench's tight-arena rerun sizes
         # each device's shard for ITS peak (a global peak split evenly could
         # under-provision the hotter shard under imbalanced placement)
         self.peak_reserved_per_device = np.zeros(self.num_devices, np.int64)
+        # per-device in-use peaks (owned + attached + cached): with prefix
+        # sharing the reservation ledger under-counts residency (cached
+        # chains are reserved by nobody), so equal-HBM sizing needs this one
+        self.peak_used_per_device = np.zeros(self.num_devices, np.int64)
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()
 
     def _free_slot_list(self) -> deque:
         return self._free_slots
@@ -363,12 +394,35 @@ class BlockPagedKVPool(_SlotRanges):
         lo = device * self.per_device_slots
         return int(self._reserved[lo : lo + self.per_device_slots].sum())
 
-    def can_reserve(self, tokens: int, device: int = 0) -> bool:
+    def unfilled_on(self, device: int) -> int:
+        """Blocks promised to ``device``'s live slots but not yet popped for
+        them.  Equal to ``reserved_on - blocks_in_use_on`` when nothing is
+        cached or shared; with a prefix cache attached, cache-held blocks
+        inflate ``blocks_in_use`` without belonging to any reservation, so
+        the ledger is computed per slot (reserved minus owned)."""
+        lo = device * self.per_device_slots
+        hi = lo + self.per_device_slots
+        return int((self._reserved[lo:hi] - self._owned[lo:hi]).sum())
+
+    def can_reserve(self, tokens: int, device: int = 0, prefix=None) -> bool:
         """True if ``device``'s block range can cover a ``tokens``-long
-        request on top of every outstanding reservation there (free blocks
-        minus the lazily-unfilled remainder of its slots' reservations)."""
-        unfilled = self.reserved_on(device) - self.blocks_in_use_on(device)
-        return len(self._free_blocks[device]) - unfilled >= self.blocks_for(tokens)
+        request on top of every outstanding reservation there (free blocks,
+        plus LRU-evictable cache-only chains, minus the lazily-unfilled
+        remainder of its slots' reservations).  ``prefix`` (a ``PrefixHit``)
+        discounts the request's fully-shared blocks — they are attached, not
+        allocated — and excludes the hit's own blocks from the evictable
+        supply (attaching pins them; the COW fork source is pinned too)."""
+        need = self.blocks_for(tokens)
+        avail = len(self._free_blocks[device])
+        if self.prefix_cache is not None:
+            avail += self.prefix_cache.evictable_count(device, self.refcounts)
+        if prefix is not None:
+            need -= len(prefix.blocks)
+            held = list(prefix.blocks)
+            if prefix.tail_src is not None:
+                held.append(prefix.tail_src)
+            avail -= sum(1 for b in held if self.refcounts[b] == 1)
+        return avail - self.unfilled_on(device) >= need
 
     def pick_device(self, reserve_tokens: int = 0) -> Optional[int]:
         """Admission placement: the least-loaded device (most free slots)
@@ -386,8 +440,13 @@ class BlockPagedKVPool(_SlotRanges):
         return best
 
     def allocate(self, reserve_tokens: int = 0,
-                 device: Optional[int] = None) -> int:
+                 device: Optional[int] = None, prefix=None) -> int:
         need = self.blocks_for(reserve_tokens)
+        if prefix is not None:
+            # charge only the unshared tail: fully-matched blocks attach by
+            # refcount, never by allocation (the COW fork block still counts
+            # — it IS an allocation)
+            need -= len(prefix.blocks)
         slot = self._pop_free_slot(device)
         # the reservation ledger is per-device, so the check runs against
         # the device the slot actually landed on (with an explicit device
@@ -395,16 +454,18 @@ class BlockPagedKVPool(_SlotRanges):
         # call checks the FIFO head's device and restores FIFO order on
         # failure)
         dev = self.device_of(slot)
-        if reserve_tokens and not self.can_reserve(reserve_tokens, dev):
+        if reserve_tokens and not self.can_reserve(reserve_tokens, dev, prefix):
             self._free_slots.appendleft(slot)
             raise RuntimeError(
                 f"BlockPagedKVPool exhausted: {need} blocks wanted on device "
                 f"{dev}, {len(self._free_blocks[dev])} free minus "
-                f"{self.reserved_on(dev) - self.blocks_in_use_on(dev)} reserved"
+                f"{self.unfilled_on(dev)} reserved"
             )
         self._used.add(slot)
         self._slot_blocks[slot] = []
         self._reserved[slot] = need
+        self._shared[slot] = 0
+        self._owned[slot] = 0
         self.peak_blocks_reserved = max(self.peak_blocks_reserved, self.blocks_reserved)
         d = self.device_of(slot)
         self.peak_reserved_per_device[d] = max(
@@ -413,17 +474,23 @@ class BlockPagedKVPool(_SlotRanges):
         return slot
 
     def free(self, slot: int) -> None:
-        """Recycle a slot and its blocks the tick its request finishes.
-        Blocks return to their device's FIFO free list in allocation
-        order (a slot's blocks are all from its own device's range)."""
+        """Release a slot's references the tick its request finishes.
+        Blocks whose refcount drops to zero return to their device's FIFO
+        free list in allocation order (a slot's blocks are all from its own
+        device's range); blocks the prefix cache or another slot still
+        references stay resident."""
         if slot not in self._used:
             raise ValueError(f"slot {slot} is not allocated")
         self._used.remove(slot)
         self.positions[slot] = 0
         dev = self.device_of(slot)
         for b in self._slot_blocks.pop(slot):
-            self._free_blocks[dev].append(b)
+            self.refcounts[b] -= 1
+            if self.refcounts[b] == 0:
+                self._free_blocks[dev].append(b)
         self._reserved[slot] = 0
+        self._shared[slot] = 0
+        self._owned[slot] = 0
         self._free_slots.append(slot)
 
     # --------------------------------------------------------- block tables --
@@ -447,28 +514,139 @@ class BlockPagedKVPool(_SlotRanges):
             raise ValueError(f"position {position} exceeds max_seq {self.max_seq}")
         blocks = self._slot_blocks[slot]
         need = self.blocks_for(position)
-        if need > self._reserved[slot]:
+        if need - self._shared[slot] > self._reserved[slot]:
             # growth past the reservation would consume blocks other slots'
             # admissions were promised — the strand-free guarantee rests on
             # every slot staying inside its allocate(reserve_tokens=) budget
+            # (attached shared blocks are free growth: nobody was charged)
             raise RuntimeError(
                 f"slot {slot}: {need} blocks exceed its reservation "
-                f"{int(self._reserved[slot])}; allocate(reserve_tokens=...) "
-                "must cover the full prompt + decode footprint"
+                f"{int(self._reserved[slot])} + {int(self._shared[slot])} "
+                "shared; allocate(reserve_tokens=...) must cover the full "
+                "prompt + decode footprint"
             )
         dev = self.device_of(slot)
         while len(blocks) < need:
-            if not self._free_blocks[dev]:
-                raise RuntimeError(
-                    f"BlockPagedKVPool exhausted mid-sequence (slot {slot}, "
-                    f"device {dev}): reservation accounting should have "
-                    "prevented this"
-                )
-            b = self._free_blocks[dev].popleft()
+            b = self._pop_block(dev, f"mid-sequence (slot {slot})")
+            self.refcounts[b] = 1
+            self._owned[slot] += 1
             self.tables[slot, len(blocks)] = b
             blocks.append(b)
             self.tables_dirty = True
+
+    def _pop_block(self, dev: int, context: str) -> int:
+        """Pop the oldest free block on ``dev``, reclaiming LRU cache-only
+        chains from the prefix cache under pressure.  Admission accounting
+        (``can_reserve`` counts free + evictable - unfilled) makes failure
+        here a bug, not a load condition."""
+        if not self._free_blocks[dev] and self.prefix_cache is not None:
+            evicted = self.prefix_cache.evict_lru(dev, self.refcounts)
+            if evicted is not None:
+                self.prefix_evictions += 1
+                self.cache_unref(evicted)
+        if not self._free_blocks[dev]:
+            raise RuntimeError(
+                f"BlockPagedKVPool exhausted {context} (device {dev}): "
+                "reservation accounting should have prevented this"
+            )
+        b = self._free_blocks[dev].popleft()
         self.peak_blocks_in_use = max(self.peak_blocks_in_use, self.blocks_in_use)
+        self.peak_used_per_device[dev] = max(
+            self.peak_used_per_device[dev], self.blocks_in_use_on(dev)
+        )
+        return b
+
+    # -------------------------------------------------------- prefix sharing --
+    def attach_prefix_cache(self, cache) -> None:
+        """Bind a ``PrefixCache``: the cache indexes this pool's blocks (one
+        refcount per entry) and the pool reclaims its LRU cache-only chains
+        under block pressure.  Opt-in: with no cache bound, every refcount
+        stays 1 and behavior is bit-identical to the unshared pool."""
+        self.prefix_cache = cache
+        cache.pool = self
+
+    def cache_ref(self, block: int) -> None:
+        self.refcounts[block] += 1
+
+    def cache_unref(self, block: int) -> None:
+        self.refcounts[block] -= 1
+        if self.refcounts[block] == 0:
+            self._free_blocks[block // self.blocks_per_device].append(block)
+
+    @property
+    def cached_blocks(self) -> int:
+        return 0 if self.prefix_cache is None else self.prefix_cache.cached_blocks()
+
+    def chain_of(self, slot: int) -> list[int]:
+        """A copy of ``slot``'s physical block chain (logical order)."""
+        return list(self._slot_blocks[slot])
+
+    def attach_prefix(self, slot: int, prefix) -> None:
+        """Wire a fresh slot to a ``PrefixHit``: fully-matched cached blocks
+        attach read-only (refcount++), and a partially-matched tail block is
+        copy-on-write forked — device-copied into a privately-owned block —
+        *now*, before the request's first divergent write can ever land in
+        shared storage.  The fork source is pinned for the duration so the
+        fork's own allocation can't reclaim it."""
+        if slot not in self._used or self._slot_blocks[slot]:
+            raise ValueError(f"slot {slot} must be freshly allocated")
+        dev = self.device_of(slot)
+        chain = self._slot_blocks[slot]
+        lo, hi = dev * self.blocks_per_device, (dev + 1) * self.blocks_per_device
+        for b in list(prefix.blocks) + (
+            [prefix.tail_src] if prefix.tail_src is not None else []
+        ):
+            if not lo <= b < hi:
+                raise ValueError(
+                    f"prefix block {b} is not on slot {slot}'s device {dev}"
+                )
+        for b in prefix.blocks:
+            self.refcounts[b] += 1
+            self.tables[slot, len(chain)] = b
+            chain.append(b)
+        self._shared[slot] = len(prefix.blocks)
+        if prefix.tail_src is not None:
+            self.refcounts[prefix.tail_src] += 1  # pin across the fork pop
+            dst = self._pop_block(dev, f"forking for slot {slot}")
+            self.refcounts[dst] = 1
+            self._owned[slot] += 1
+            self.tables[slot, len(chain)] = dst
+            chain.append(dst)
+            self._fork_copy(prefix.tail_src, dst)
+            self.refcounts[prefix.tail_src] -= 1
+            self.prefix_forks += 1
+        self.tables_dirty = True
+
+    def _fork_copy(self, src: int, dst: int) -> None:
+        """Device-side block copy across every paged arena leaf.  All
+        ``layers`` leaves are ``(L, num_blocks, block_size, ...)`` — the
+        block axis is axis 1 for dense KV and MLA latents alike — so one
+        jitted dynamic slice/update with traced indices covers every family
+        with a single compilation."""
+        if self._fork_jit is None:
+            def fork(cache, s, d):
+                def cp(leaf):
+                    blk = jax.lax.dynamic_slice_in_dim(leaf, s, 1, axis=1)
+                    return jax.lax.dynamic_update_slice_in_dim(leaf, blk, d, axis=1)
+                out = dict(cache)
+                out["layers"] = jax.tree.map(cp, cache["layers"])
+                return out
+            self._fork_jit = jax.jit(fork, donate_argnums=(0,))
+        self.cache = self._fork_jit(self.cache, np.int32(src), np.int32(dst))
+
+    def write_barrier(self, slot: int, position: int) -> None:
+        """COW safety assertion: the block ``slot``'s next write lands in
+        must be privately owned (refcount 1).  Attach-time forking makes
+        this true by construction — prompt blocks enter the cache only
+        after their owner stops writing them — so a trip here is a sharing
+        bug, never a load condition."""
+        idx = int(position) // self.block_size
+        chain = self._slot_blocks.get(slot, ())
+        if idx < len(chain) and self.refcounts[chain[idx]] != 1:
+            raise RuntimeError(
+                f"COW violation: slot {slot} would write block {chain[idx]} "
+                f"with refcount {int(self.refcounts[chain[idx]])}"
+            )
 
     # ------------------------------------------------------------- contents --
     def insert(self, request_cache, slot: int, position: int) -> None:

@@ -1,0 +1,328 @@
+"""Radix prefix cache: token prefixes -> physical block chains.
+
+Millions of users means massively shared prefixes (system prompts, few-shot
+templates, multi-turn history).  ``BlockPagedKVPool`` already separates
+physical blocks from per-slot tables, and the GN-softmax guarantee — masked
+scores map to *exactly-zero* numerators with Σp = 1 through any block
+layout — means a physical KV block reads identically through ANY slot's
+table: sharing a block is a correctness-preserving transform, not an
+approximation.  This module is the index that finds the blocks to share.
+
+Structure: one radix tree per device (chains are device-local — a slot only
+ever holds blocks from its own device's arena shard).  Each tree node keys
+one **block-aligned token chunk** (``block_size`` tokens, hashed as the raw
+int32 bytes) and holds the physical block whose KV covers those tokens at
+those positions.  A node may additionally hold one *partial tail*: the
+sub-block remainder of the most recently finished prompt under that node
+(``len(tail_tokens) < block_size``), which is what lets admission share a
+prefix past the last full-block boundary (the COW case — the engine forks
+that block before the new request appends into it).
+
+Content rule — only immutable prompt KV is ever indexed:
+
+* full prompt blocks enter when their owner finishes *prefilling* (from
+  then on the owner only writes at positions >= prompt_len, which live in
+  later blocks);
+* the partial prompt-tail block enters when the owner *finishes* (its
+  decode appends land beyond every possible sharer's causal mask — matched
+  reads stop at the matched token count, and masked columns contribute
+  exactly 0 under GN);
+* generated-token KV is never indexed: decode-step K need not be bitwise
+  equal to prefill-chunk K, and greedy identity vs the unshared oracle is
+  the subsystem's pinnable invariant — sharing only prompt-position KV
+  keeps it exact by construction.
+
+Reference counting lives in the pool (``BlockPagedKVPool.refcounts``); the
+cache holds exactly one reference per indexed block and the pool recycles a
+block only when its refcount hits zero.  Under block pressure the pool
+reclaims cache-only blocks (refcount == 1) via ``evict_lru`` — leaf-first
+(tails before childless nodes, never an interior node, so every surviving
+chain stays matchable), LRU by a deterministic op counter (never wall
+time — replay determinism is load-bearing for every serving test).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """One admission-time lookup result.
+
+    ``blocks`` are the fully-matched chain blocks (``shared_len // bs`` of
+    them) the slot will *attach* (refcount++, never written).  ``tail_src``
+    is the source block for the partially-matched remainder
+    (``shared_len % bs`` tokens), to be copy-on-write forked into a private
+    block before the request's first divergent write; None when the match
+    ends exactly on a block boundary."""
+
+    device: int
+    blocks: list[int]
+    shared_len: int
+    tail_src: Optional[int] = None
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks) + (1 if self.tail_src is not None else 0)
+
+
+class _Node:
+    __slots__ = ("block", "children", "tail", "stamp")
+
+    def __init__(self, block: Optional[int]):
+        self.block = block  # physical id; None only at the root
+        self.children: dict[bytes, _Node] = {}
+        # (tail_tokens bytes, token count, physical block) — at most one
+        self.tail: Optional[tuple[bytes, int, int]] = None
+        self.stamp = 0
+
+
+class PrefixCache:
+    """Per-device radix index from block-aligned token prefixes to physical
+    block chains.  Pure host-side bookkeeping: the pool owns refcounts and
+    free lists; the engine owns the device-side COW copy.  All ordering is
+    driven by a deterministic op clock, so a reset engine replays a
+    workload with identical hit/evict sequences."""
+
+    def __init__(self, block_size: int, num_devices: int = 1):
+        self.block_size = int(block_size)
+        self.num_devices = int(num_devices)
+        self.pool = None  # bound by BlockPagedKVPool.attach_prefix_cache
+        self.clear()
+
+    def clear(self) -> None:
+        self._roots = [_Node(None) for _ in range(self.num_devices)]
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # --------------------------------------------------------------- size --
+    def _iter_nodes(self, device: int):
+        stack = [self._roots[device]]
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    def cached_blocks(self, device: Optional[int] = None) -> int:
+        """Blocks currently held (referenced) by the index."""
+        devs = range(self.num_devices) if device is None else (device,)
+        n = 0
+        for d in devs:
+            for node in self._iter_nodes(d):
+                if node.block is not None:
+                    n += 1
+                if node.tail is not None:
+                    n += 1
+        return n
+
+    def evictable_count(self, device: int, refcounts: np.ndarray) -> int:
+        """Cache-held blocks on ``device`` no live slot references
+        (refcount == 1: the cache's own ref) — what block pressure can
+        reclaim.  The simple count is exact *because* ``evict_lru`` has a
+        subtree-cut fallback: an interior refcount-1 node whose descendants
+        are pinned by live slots (a still-decoding request indexed its own
+        chain at phase-flip) can't be reached leaf-first, but cutting its
+        subtree drops the descendants' index entries (their owners re-index
+        on finish) and reclaims it anyway — so every counted block is
+        genuinely reachable and admission promises only what eviction can
+        deliver."""
+        n = 0
+        for node in self._iter_nodes(device):
+            if node.block is not None and refcounts[node.block] == 1:
+                n += 1
+            if node.tail is not None and refcounts[node.tail[2]] == 1:
+                n += 1
+        return n
+
+    # ------------------------------------------------------------- lookup --
+    def _chunks(self, tokens: np.ndarray, limit: int):
+        bs = self.block_size
+        for i in range(limit // bs):
+            yield tokens[i * bs : (i + 1) * bs].tobytes()
+
+    def match_len(self, tokens) -> int:
+        """Longest indexed prefix of ``tokens`` in tokens, across devices,
+        without touching LRU stamps — the scheduler's submit-time hint
+        (admission re-runs the authoritative, stamp-touching ``lookup``)."""
+        hit = self.lookup(tokens, touch=False)
+        return hit.shared_len if hit else 0
+
+    def lookup(self, tokens, cap: Optional[int] = None,
+               touch: bool = True) -> Optional[PrefixHit]:
+        """Longest matched prefix of ``tokens`` (over all devices; ties go
+        to the lowest device — deterministic).  ``cap`` bounds the match
+        length (the engine passes prompt_len - 1 so at least one prompt
+        token always runs through prefill — the sampled next-token logits
+        must come from the request's own final prompt position)."""
+        tokens = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+        limit = tokens.shape[0] if cap is None else min(cap, tokens.shape[0])
+        if limit <= 0:
+            if touch:
+                self.misses += 1
+            return None
+        bs = self.block_size
+        best: Optional[PrefixHit] = None
+        for d in range(self.num_devices):
+            node = self._roots[d]
+            path: list[_Node] = []
+            for key in self._chunks(tokens, limit):
+                child = node.children.get(key)
+                if child is None:
+                    break
+                node = child
+                path.append(node)
+            shared = len(path) * bs
+            tail_src = None
+            if shared < limit:
+                # extend past the full-block walk: the node's partial tail
+                # and any partially-matching full-block child both offer a
+                # COW fork source — take the longest token run (first
+                # insertion wins ties: children iterate in insertion order,
+                # deterministic)
+                nxt = tokens[shared : min(shared + bs, limit)]
+                extra, src, src_node = 0, None, None
+                if node.tail is not None:
+                    ttok, tlen, tblock = node.tail
+                    want = np.frombuffer(ttok, np.int32)
+                    n = min(tlen, nxt.shape[0])
+                    run = int(np.cumprod(nxt[:n] == want[:n]).sum()) if n else 0
+                    if run > extra:
+                        extra, src = run, tblock
+                for ckey, child in node.children.items():
+                    have = np.frombuffer(ckey, np.int32)[: nxt.shape[0]]
+                    run = int(np.cumprod(nxt == have).sum()) if nxt.size else 0
+                    if run > extra:
+                        extra, src, src_node = run, child.block, child
+                if extra:
+                    shared += extra
+                    tail_src = src
+                    if src_node is not None:
+                        # a full-block child won: stamp it on touch so the
+                        # fork source isn't the next LRU eviction victim
+                        path.append(src_node)
+            if shared and (best is None or shared > best.shared_len):
+                full = [n.block for n in path[: shared // bs]]
+                best = PrefixHit(device=d, blocks=full, shared_len=shared,
+                                 tail_src=tail_src)
+                best_path = path
+        if best is None:
+            if touch:
+                self.misses += 1
+            return None
+        if touch:
+            self.hits += 1
+            stamp = self._tick()
+            for n in best_path:
+                n.stamp = stamp
+        return best
+
+    # ------------------------------------------------------------- insert --
+    def insert(self, tokens, blocks: list[int], device: int) -> None:
+        """Index ``tokens`` (a finished/prefilled prompt prefix) backed by
+        the physical ``blocks`` chain (``ceil(len(tokens)/bs)`` entries).
+        Existing nodes are kept (their block holds bitwise-identical KV —
+        same tokens at same positions through the same jitted prefill), so
+        only newly created nodes take a cache reference.  A sub-block
+        remainder becomes the node's single partial tail, replacing (and
+        releasing) any previous one."""
+        if self.pool is None:
+            raise RuntimeError("PrefixCache is not attached to a pool")
+        tokens = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+        bs = self.block_size
+        full = tokens.shape[0] // bs
+        rem = tokens.shape[0] % bs
+        node = self._roots[device]
+        stamp = self._tick()
+        for i, key in enumerate(self._chunks(tokens, full * bs)):
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(blocks[i])
+                node.children[key] = child
+                self.pool.cache_ref(blocks[i])
+                self.inserts += 1
+            child.stamp = stamp
+            node = child
+        if rem:
+            tail_block = blocks[full]
+            old = node.tail
+            if old is not None and old[2] == tail_block and old[1] >= rem:
+                return  # an equal-or-longer tail of the same block stands
+            node.tail = (tokens[full * bs :].tobytes(), rem, tail_block)
+            self.pool.cache_ref(tail_block)
+            self.inserts += 1
+            if old is not None:
+                self.pool.cache_unref(old[2])
+
+    # ------------------------------------------------------------ eviction --
+    def evict_lru(self, device: int, refcounts: np.ndarray) -> Optional[int]:
+        """Detach and return the least-recently-used evictable block on
+        ``device`` (cache-only refcount).  Leaf-first: partial tails, then
+        childless/tailless nodes, so surviving chains stay matchable.  When
+        no leaf is evictable but refcount-1 nodes remain (their descendants
+        are pinned — a live slot indexed its own chain at phase-flip), the
+        deepest LRU such node's entire subtree is *cut*: every descendant's
+        index entry is dropped (cache-only descendants recycle immediately;
+        live-pinned ones merely lose their entry and are re-indexed when
+        their owner finishes).  None when nothing is evictable; the caller
+        (pool) drops the returned block's reference and recycles it."""
+        root = self._roots[device]
+        best = None  # leaf candidates: ((stamp, kind), holder, key, node)
+        cut = None   # fallback: ((stamp, -depth), parent, key, node)
+        stack = [(root, None, None, 0)]
+        while stack:
+            node, parent, key, depth = stack.pop()
+            if node.tail is not None and refcounts[node.tail[2]] == 1:
+                cand = ((node.stamp, 0), node, None, None)
+                if best is None or cand[0] < best[0]:
+                    best = cand
+            if parent is not None and refcounts[node.block] == 1:
+                if not node.children and node.tail is None:
+                    cand = ((node.stamp, 1), parent, key, node)
+                    if best is None or cand[0] < best[0]:
+                        best = cand
+                else:
+                    # subtree-cut fallback: deepest LRU first, so ancestors
+                    # (and the chains through them) survive the cut
+                    cand = ((node.stamp, -depth), parent, key, node)
+                    if cut is None or cand[0] < cut[0]:
+                        cut = cand
+            for k, child in node.children.items():
+                stack.append((child, node, k, depth + 1))
+        kind = 2
+        if best is not None:
+            (_, kind), holder, key, node = best
+        elif cut is not None:
+            _, holder, key, node = cut
+        else:
+            return None
+        self.evictions += 1
+        if kind == 0:
+            block = holder.tail[2]
+            holder.tail = None
+            return block
+        holder.children.pop(key)
+        if kind == 2:
+            # drop the subtree's index entries; the cut node's own block is
+            # returned for the caller to unref, everything below unrefs here
+            if node.tail is not None:
+                self.pool.cache_unref(node.tail[2])
+                node.tail = None
+            stack = list(node.children.values())
+            node.children = {}
+            while stack:
+                sub = stack.pop()
+                self.pool.cache_unref(sub.block)
+                if sub.tail is not None:
+                    self.pool.cache_unref(sub.tail[2])
+                stack.extend(sub.children.values())
+        return node.block

@@ -60,6 +60,11 @@ class Request:
     extras: dict = dataclasses.field(default_factory=dict)
     id: int = -1  # assigned by the scheduler on submit
     padded_tokens: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+    # submit-time prefix-cache hint: how many leading prompt tokens were
+    # already indexed when the request entered the queue (telemetry only —
+    # admission re-runs the authoritative lookup against the cache state at
+    # admit time, which later finishes/evictions will have changed)
+    prefix_hint: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -105,10 +110,18 @@ class FCFSScheduler:
     fused step's chunk grid at submit (``pad_to_grid``): intake padding is
     bounded by grid-1 tokens per request and the engine's per-tick shape is
     independent of the prompt-length mix, so the fused step compiles once.
+
+    With a ``prefix_cache`` bound (the engine passes its own), submit stamps
+    each queued request's ``prefix_hint`` — the indexed prefix length at
+    submit time, via the stamp-free ``match_len`` so queue traffic never
+    perturbs LRU order.  The hint is telemetry (demos print it; operators
+    see sharing potential at intake); admission re-runs the authoritative
+    lookup, since the cache keeps changing while the request waits.
     """
 
-    def __init__(self, chunk_grid: int = 0):
+    def __init__(self, chunk_grid: int = 0, prefix_cache=None):
         self.chunk_grid = int(chunk_grid)
+        self.prefix_cache = prefix_cache
         self._queue: deque[Request] = deque()
         self._next_id = 0
         self._pad_tokens = 0  # total intake padding (bucketing overhead)
@@ -137,6 +150,8 @@ class FCFSScheduler:
         )
         if self.chunk_grid:
             self._pad_tokens += int(queued.padded_tokens.shape[0]) - queued.prompt_len
+        if self.prefix_cache is not None:
+            queued.prefix_hint = self.prefix_cache.match_len(queued.tokens)
         self._queue.append(queued)
         return rid
 

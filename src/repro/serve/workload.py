@@ -63,5 +63,50 @@ def staggered_requests(
     return reqs
 
 
+def shared_prefix_requests(
+    cfg: ModelConfig,
+    n_users: int = 12,
+    n_personas: int = 3,
+    system_len: int = 48,
+    persona_len: int = 12,
+    user_len: int = 8,
+    max_new_tokens: int = 8,
+    stagger: int = 2,
+    seed: int = 11,
+) -> list[Request]:
+    """The prefix-sharing workload: ``n_users`` requests over ONE common
+    system prompt (``system_len`` tokens, shared by everyone), each routed
+    through one of ``n_personas`` persona preambles (``persona_len`` tokens,
+    shared within a persona, round-robin assigned), followed by a
+    per-user-unique ``user_len`` suffix:
+
+        prompt_i = system ++ persona[i % n_personas] ++ user_i
+
+    Arrivals stagger every ``stagger`` steps so early finishers seed the
+    radix cache for later arrivals — the first request of each persona pays
+    the full prefill, everyone after it should hit (system + persona) and
+    prefill only the user tail.  Deterministic in ``seed`` (the same
+    Zipf-Markov corpus as ``staggered_requests``), so engine resets replay
+    identical hit/evict sequences."""
+    def _draw(length: int, s: int) -> np.ndarray:
+        data = DataConfig(vocab=cfg.vocab, seq_len=length, global_batch=1, seed=s)
+        return np.asarray(batch_at(data, 0)["tokens"][0], np.int32)
+
+    system = _draw(system_len, seed)
+    personas = [_draw(persona_len, seed + 1 + p) for p in range(n_personas)]
+    reqs = []
+    for i in range(n_users):
+        tail = _draw(user_len, seed + 100 + i)
+        tokens = np.concatenate([system, personas[i % n_personas], tail])
+        reqs.append(Request(
+            id=i,
+            tokens=tokens,
+            max_new_tokens=max_new_tokens,
+            arrival_step=i * stagger,
+            extras=_extras_for(cfg),
+        ))
+    return reqs
+
+
 def required_max_seq(requests) -> int:
     return max(r.prompt_len + r.max_new_tokens for r in requests)
