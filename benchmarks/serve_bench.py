@@ -97,6 +97,7 @@ from repro.serve.kv_cache import tree_bytes
 from repro.serve.workload import (
     required_max_seq,
     shared_prefix_requests,
+    sla_requests,
     staggered_requests,
 )
 
@@ -539,13 +540,200 @@ def run_shared_prefix(arch: str = "internlm2-1.8b", n_users: int = 16,
     return writeout("BENCH_serve", payload)
 
 
+# ---------------------------------------------------------------- sla scenario
+def _pct(vals, q: float) -> float:
+    return float(np.percentile(vals, q)) if len(vals) else -1.0
+
+
+def _class_stats(comps, klass: str) -> dict:
+    """Arrival-anchored step-clock latency stats for one request class.
+    Percentiles are over *served* requests (rejected ones never produced a
+    token — they are counted, not averaged in)."""
+    cls = [c for c in comps if c.req_class == klass]
+    served = [c for c in cls if c.finish_reason != "rejected"]
+    ttft = [c.ttft_steps for c in served if c.ttft_steps >= 0]
+    qwait = [c.queue_wait_steps for c in served]
+    tpot = [c.tpot_steps for c in served if c.tpot_steps > 0]
+    return {
+        "n": len(cls),
+        "served": len(served),
+        "rejected": len(cls) - len(served),
+        "preemptions": sum(c.preemptions for c in served),
+        "ttft_steps_p50": _pct(ttft, 50),
+        "ttft_steps_p99": _pct(ttft, 99),
+        "queue_wait_steps_p50": _pct(qwait, 50),
+        "queue_wait_steps_p99": _pct(qwait, 99),
+        "tpot_steps_mean": float(np.mean(tpot)) if tpot else -1.0,
+    }
+
+
+def run_sla(arch: str = "internlm2-1.8b", n_requests: int = 24,
+            base_len: int = 16, rates: tuple = (0.25, 0.5),
+            num_slots: int = 0, chunk: int = 8, reps: int = 2,
+            devices: int = 1, preempt: str = "spill",
+            aging_steps: int = 48, shed_backlog: int = 0,
+            seed: int = 13) -> dict:
+    """The SLA headline: open-loop bursty arrivals (``sla_requests``, a
+    seeded two-state MMPP with interactive and batch classes) served at
+    each offered load twice on the same host — FCFS (baseline) vs
+    PriorityScheduler + preemption — and compared on per-class
+    arrival-anchored TTFT/TPOT percentiles measured on the deterministic
+    engine step clock.  The acceptance number is
+    ``interactive_ttft_p99_improvement``: class-aware admission plus
+    block-level eviction of batch victims must cut the interactive tail at
+    the same offered load.  Every served request (preempted-and-resumed
+    ones included) is asserted greedy token-identical to the static
+    oracle, each priority engine is reset and replayed to assert an
+    identical event trace, and compile counters are asserted at the PR 5
+    per-bucket bounds — robustness must not cost determinism or compiles.
+    History rows carry scenario="sla"."""
+    cfg = reduce_config(get_config(arch))
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    num_slots = round_slots_to_devices(num_slots or max(2, n_requests // 8),
+                                       devices)
+
+    scfg = ServeConfig()
+    jax.block_until_ready(jnp.zeros(()) + 1)
+
+    def _assert_counters(m: dict) -> None:
+        # the PR 5 bound: exactly one trace per (step kind, horizon bucket),
+        # each capped by the grid; no per-prompt-length prefill jits —
+        # preemption/resume must not add a single extra compile
+        assert m["prefill_compilations"] == 0, m
+        if m["kv_paged"]:
+            assert m["fused_step_compilations"] == len(m["fused_buckets"]), m
+            assert m["decode_compilations"] == len(m["decode_buckets"]), m
+            grid = len(m["horizon_bucket_grid"])
+            assert m["fused_step_compilations"] <= grid, m
+            assert m["decode_compilations"] <= grid, m
+        else:
+            assert m["fused_step_compilations"] <= 1, m
+            assert m["decode_compilations"] <= 1, m
+
+    sweep = []
+    for rate in rates:
+        reqs = sla_requests(cfg, n_requests=n_requests, base_len=base_len,
+                            rate=rate, seed=seed)
+        max_seq = required_max_seq(reqs)
+        ref = static_reference(model, params, reqs, scfg)
+        span = max(1, max(r.arrival_step for r in reqs))
+        point = {
+            "rate": rate,
+            "offered_tokens_per_step": sum(r.max_new_tokens for r in reqs) / span,
+            "arrival_span_steps": span,
+        }
+        for side, kwargs in (
+            ("fcfs", dict(sched="fcfs")),
+            ("priority", dict(sched="priority", preempt=preempt,
+                              aging_steps=aging_steps,
+                              shed_backlog=shed_backlog)),
+        ):
+            t0 = time.time()
+            eng = ContinuousEngine(model, params, num_slots=num_slots,
+                                   max_seq=max_seq, cfg=scfg, chunk=chunk,
+                                   devices=devices, **kwargs)
+            comps = eng.run(reqs)
+            cold_s = time.time() - t0
+            served = [c for c in comps if c.finish_reason != "rejected"]
+            assert all(np.array_equal(c.tokens, ref[c.request_id])
+                       for c in served), \
+                f"{side}@{rate}: served output diverged from the oracle " \
+                "(preempted-and-resumed requests must be token-identical)"
+            trace = list(eng.event_log)
+            total = 0.0
+            for _ in range(reps):
+                eng.reset()
+                t0 = time.time()
+                eng.run(reqs)
+                total += time.time() - t0
+            assert eng.event_log == trace, \
+                f"{side}@{rate}: replay produced a different event trace"
+            m = eng.metrics()
+            _assert_counters(m)
+            useful = sum(int(np.asarray(c.new_tokens).shape[0]) for c in served)
+            point[side] = {
+                "interactive": _class_stats(comps, "interactive"),
+                "batch": _class_stats(comps, "batch"),
+                "preemptions": m["preemptions"],
+                "preempt_resumes": m["preempt_resumes"],
+                "rejections": m["rejections"],
+                "decode_steps": m["decode_steps"],
+                "cold_wall_s": cold_s,
+                "wall_s": total / reps,
+                "served_tokens_per_s": useful / (total / reps),
+                "fused_step_compilations": m["fused_step_compilations"],
+                "decode_compilations": m["decode_compilations"],
+                "prefill_compilations": m["prefill_compilations"],
+            }
+        f99 = point["fcfs"]["interactive"]["ttft_steps_p99"]
+        p99 = point["priority"]["interactive"]["ttft_steps_p99"]
+        point["interactive_ttft_p99_improvement"] = f99 / max(1e-9, p99)
+        sweep.append(point)
+
+    workload = {
+        "scenario": "sla",
+        "arch": arch,
+        "n_requests": n_requests,
+        "base_len": base_len,
+        "rates": list(rates),
+        "num_slots": num_slots,
+        "chunk": chunk,
+        "num_devices": devices,
+        "preempt": preempt,
+        "aging_steps": aging_steps,
+        "shed_backlog": shed_backlog,
+        "seed": seed,
+    }
+    top = sweep[-1]  # highest offered load = the headline point
+    payload = {
+        "benchmark": "serve",
+        "scenario": "sla",
+        "arch": arch,
+        "workload": workload,
+        "sweep": sweep,
+        "interactive_ttft_p99_improvement":
+            top["interactive_ttft_p99_improvement"],
+        "greedy_token_identical": True,   # asserted per side above
+        "deterministic_replay": True,     # asserted per side above
+    }
+    history = _load_history()
+    _upsert_history(history, {
+        "git_sha": _git_sha(),
+        "arch": arch,
+        "scenario": "sla",
+        "workload_hash": _workload_hash(workload),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "num_devices": devices,
+        "greedy_token_identical": True,
+        "interactive_ttft_p99_improvement":
+            top["interactive_ttft_p99_improvement"],
+        "interactive_ttft_p99_fcfs": top["fcfs"]["interactive"]["ttft_steps_p99"],
+        "interactive_ttft_p99_priority":
+            top["priority"]["interactive"]["ttft_steps_p99"],
+        "batch_ttft_p99_priority": top["priority"]["batch"]["ttft_steps_p99"],
+        "preemptions": top["priority"]["preemptions"],
+        "preempt_resumes": top["priority"]["preempt_resumes"],
+        "rejections": top["priority"]["rejections"],
+        "preempt_mode": preempt,
+        "tokens_per_s": top["priority"]["served_tokens_per_s"],
+        "decode_compilations": top["priority"]["decode_compilations"],
+        "fused_step_compilations": top["priority"]["fused_step_compilations"],
+        "prefill_compilations": top["priority"]["prefill_compilations"],
+    })
+    payload["history"] = history[-_HISTORY_MAX:]
+    return writeout("BENCH_serve", payload)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b", choices=list_archs())
     ap.add_argument("--scenario", default="default",
-                    choices=["default", "shared-prefix"],
+                    choices=["default", "shared-prefix", "sla"],
                     help="'shared-prefix': N users x M personas over a "
-                         "common system prompt, prefix cache on vs off")
+                         "common system prompt, prefix cache on vs off; "
+                         "'sla': bursty two-class open-loop load, FCFS vs "
+                         "priority+preemption per offered rate")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--base-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -567,7 +755,45 @@ def main():
     ap.add_argument("--persona-len", type=int, default=16)
     ap.add_argument("--user-len", type=int, default=8)
     ap.add_argument("--stagger", type=int, default=4)
+    # sla scenario shape (ignored for the other scenarios)
+    ap.add_argument("--rates", default="0.25,0.5",
+                    help="comma-separated offered arrival rates (requests "
+                         "per engine step, calm-state mean) to sweep")
+    ap.add_argument("--preempt", default="spill",
+                    choices=["spill", "recompute"],
+                    help="preemption mechanism for the priority side")
+    ap.add_argument("--aging", type=int, default=48,
+                    help="batch anti-starvation bound (engine steps)")
+    ap.add_argument("--shed-backlog", type=int, default=0,
+                    help="overload shed watermark in pool units (0 = off)")
     args = ap.parse_args()
+    if args.scenario == "sla":
+        payload = run_sla(
+            args.arch, n_requests=args.requests, base_len=args.base_len,
+            rates=tuple(float(r) for r in args.rates.split(",")),
+            num_slots=args.num_slots, chunk=args.chunk, devices=args.devices,
+            preempt=args.preempt, aging_steps=args.aging,
+            shed_backlog=args.shed_backlog,
+        )
+        print(json.dumps({k: v for k, v in payload.items() if k != "history"},
+                         indent=2, default=float))
+        print(f"\n{'rate':>6} {'side':>9} {'int p50/p99 ttft':>17} "
+              f"{'batch p99 ttft':>14} {'preempt':>7} {'reject':>6}")
+        for pt in payload["sweep"]:
+            for side in ("fcfs", "priority"):
+                st = pt[side]
+                i, b = st["interactive"], st["batch"]
+                print(f"{pt['rate']:6.2f} {side:>9} "
+                      f"{i['ttft_steps_p50']:7.1f}/{i['ttft_steps_p99']:6.1f} "
+                      f"{b['ttft_steps_p99']:14.1f} "
+                      f"{st['preemptions']:7d} {st['rejections']:6d}")
+        print(f"interactive p99 TTFT improvement at top load: "
+              f"{payload['interactive_ttft_p99_improvement']:.2f}x "
+              f"({args.preempt}, aging {args.aging}, "
+              f"shed {args.shed_backlog})  token-identical="
+              f"{payload['greedy_token_identical']}  "
+              f"(history: {len(payload['history'])} runs)")
+        return
     if args.scenario == "shared-prefix":
         payload = run_shared_prefix(
             args.arch, n_users=args.users, n_personas=args.personas,

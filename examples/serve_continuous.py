@@ -22,9 +22,20 @@ the blocks it attached from the cache (``hit req3: 18tok/4blk+fork``) and
 the epilogue reports hit rate, COW forks and evictions — watch later
 arrivals skip straight to decoding their unshared tail.
 
+``--sla`` switches to the bursty two-class workload (``sla_requests``) and
+the SLA control plane: priority scheduling with an aging bound plus
+block-level preemption (``--preempt spill|recompute``).  Slot marks gain a
+class case (upper = interactive, lower = batch) and the timeline annotates
+preemptions (``preempt req2@slot1``), resumes and rejections; the epilogue
+prints per-class arrival-anchored TTFT on the engine step clock — the
+interactive tail the priority policy exists to cut — and still
+cross-checks every served request (preempted-and-resumed ones included)
+against the static oracle.
+
 Run:  PYTHONPATH=src python examples/serve_continuous.py [--arch internlm2-1.8b]
       PYTHONPATH=src python examples/serve_continuous.py --devices 2
       PYTHONPATH=src python examples/serve_continuous.py --shared-prefix
+      PYTHONPATH=src python examples/serve_continuous.py --sla
 """
 import argparse
 import time
@@ -48,6 +59,7 @@ from repro.serve.engine import (
 from repro.serve.workload import (
     required_max_seq,
     shared_prefix_requests,
+    sla_requests,
     staggered_requests,
 )
 
@@ -62,7 +74,15 @@ def main():
                     help="shard the slot pool over N (forced host) devices")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="shared system-prompt workload + radix prefix cache")
+    ap.add_argument("--sla", action="store_true",
+                    help="bursty two-class workload + priority scheduling "
+                         "and block-level preemption")
+    ap.add_argument("--preempt", default="spill",
+                    choices=["spill", "recompute"],
+                    help="preemption mechanism under --sla")
     args = ap.parse_args()
+    if args.sla and args.shared_prefix:
+        ap.error("--sla and --shared-prefix are separate demos")
 
     cfg = reduce_config(get_config(args.arch))
     model = make_model(cfg)
@@ -72,6 +92,10 @@ def main():
                                       system_len=24, persona_len=10, user_len=6,
                                       max_new_tokens=args.new_tokens, stagger=4,
                                       seed=3)
+    elif args.sla:
+        reqs = sla_requests(cfg, n_requests=args.requests, base_len=12,
+                            rate=0.4, max_new_interactive=args.new_tokens // 2,
+                            max_new_batch=2 * args.new_tokens, seed=3)
     else:
         reqs = staggered_requests(cfg, n_requests=args.requests, base_len=16,
                                   max_new_tokens=args.new_tokens, stagger=2,
@@ -80,17 +104,22 @@ def main():
     engine = ContinuousEngine(model, params, num_slots=num_slots,
                               max_seq=required_max_seq(reqs), cfg=ServeConfig(),
                               devices=args.devices,
-                              prefix_cache=args.shared_prefix)
+                              prefix_cache=args.shared_prefix,
+                              sched="priority" if args.sla else "fcfs",
+                              preempt=args.preempt if args.sla else "off",
+                              aging_steps=24)
     for r in reqs:
         engine.submit(r)
 
-    kind = "shared-prefix " if args.shared_prefix else ""
+    kind = ("shared-prefix " if args.shared_prefix
+            else "sla " if args.sla else "")
     print(f"{args.requests} {kind}requests / {num_slots} slots "
           f"on {args.devices} device(s) "
           f"(prompt lens {sorted({r.prompt_len for r in reqs})}, "
           f"max_new {sorted({r.max_new_tokens for r in reqs})})\n")
     done = 0
     seen_hits = 0
+    seen_events = 0
     pds = num_slots // args.devices
     t0 = time.time()
     while engine.step():
@@ -98,12 +127,16 @@ def main():
         done = len(engine.completions)
         live = sum(s is not None for s in engine._slots)
         # P = prefilling a prompt chunk, D = decoding, . = idle slot;
-        # '|' separates each device's slot range under a sharded pool
+        # under --sla the case carries the class (P/D interactive,
+        # p/d batch — the preemptible ones); '|' separates each device's
+        # slot range under a sharded pool
+        def _mark(s):
+            if s is None:
+                return "."
+            m = "P" if s.phase == "prefilling" else "D"
+            return m.lower() if s.req.req_class == "batch" else m
         marks = "|".join(
-            "".join(
-                "." if s is None else ("P" if s.phase == "prefilling" else "D")
-                for s in engine._slots[d * pds : (d + 1) * pds]
-            )
+            "".join(_mark(s) for s in engine._slots[d * pds : (d + 1) * pds])
             for d in range(args.devices)
         )
         occ = engine.device_occupancy()
@@ -118,9 +151,21 @@ def main():
             + ("+fork" if h["forked"] else "")
             for rid, h in hits
         )
+        # SLA control-plane events: eviction (KV spilled or freed-for-
+        # recompute), the later resume, and watermark rejections
+        events = engine.event_log[seen_events:]
+        seen_events = len(engine.event_log)
+        sla = " ".join(
+            f"preempt req{e[2]}@slot{e[4]}({e[3]})" if e[0] == "preempt"
+            else f"resume req{e[2]}@slot{e[3]}" if e[0] == "resume"
+            else f"REJECT req{e[2]}" if e[0] == "reject" else ""
+            for e in events
+            if e[0] in ("preempt", "resume", "reject")
+        ).strip()
         print(f"step {engine.step_count - 1:3d}  slots [{marks}] "
               f"active={live}{dev}"
               + (f"  {hit}" if hit else "")
+              + (f"  {sla}" if sla else "")
               + (f"  finished: {fin}" if fin else ""))
     dt = time.time() - t0
 
@@ -141,12 +186,28 @@ def main():
               f"tokens), {m['prefix_hit_requests']} hit requests, "
               f"{m['prefix_forks']} COW forks, {m['prefix_evictions']} "
               f"evictions, {m['prefix_cached_blocks']} blocks retained")
-    lat = [c.latency_s for c in engine.completions]
+    if args.sla:
+        print(f"sla: {m['preemptions']} preemptions ({m['preempt_mode']}), "
+              f"{m['preempt_resumes']} resumes, {m['rejections']} rejections")
+        for klass in ("interactive", "batch"):
+            cs = [c for c in engine.completions
+                  if c.req_class == klass and c.finish_reason != "rejected"]
+            if not cs:
+                continue
+            ttft = [c.ttft_steps for c in cs]
+            wait = [c.queue_wait_steps for c in cs]
+            # arrival-anchored step-clock latency: queue wait included,
+            # deterministic under replay (see docs/serving.md §6)
+            print(f"  {klass:<11} n={len(cs):2d}  ttft_steps "
+                  f"p50 {np.median(ttft):.0f} max {max(ttft)}  "
+                  f"queue_wait p50 {np.median(wait):.0f} max {max(wait)}")
+    lat = [c.latency_s for c in engine.completions
+           if c.finish_reason != "rejected"]
     print(f"latency p50 {np.median(lat)*1e3:.0f}ms  max {max(lat)*1e3:.0f}ms")
 
     ref = static_reference(model, params, reqs, ServeConfig())
     same = all(np.array_equal(c.tokens, ref[c.request_id])
-               for c in engine.completions)
+               for c in engine.completions if c.finish_reason != "rejected")
     print(f"greedy outputs token-identical to the static engine: {same}")
 
 

@@ -62,7 +62,9 @@ from repro.models.transformer import Model
 from repro.parallel.sharding import make_slot_mesh
 from repro.serve.kv_cache import BlockPagedKVPool, SlotKVPool
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import Completion, FCFSScheduler, Request, pad_to_grid
+from repro.serve.scheduler import (
+    Completion, FCFSScheduler, PriorityScheduler, Request, pad_to_grid,
+)
 
 
 class CountingJit:
@@ -200,9 +202,35 @@ class _SlotState:
     generated: list
     phase: str = "decoding"       # 'prefilling' | 'decoding'
     padded: Optional[np.ndarray] = None  # prompt padded to the chunk grid
-    written: int = 0              # prompt tokens committed to the cache
+    written: int = 0              # prefill tokens committed to the cache
+    # tokens the prefill phase must commit before the slot flips to
+    # decoding.  == req.prompt_len normally; a recompute-resumed request
+    # re-prefills prompt + already-generated tokens, so it is longer.
+    prefill_len: int = 0
     first_token_step: int = -1
     first_token_time: float = 0.0
+    preemptions: int = 0          # times this request has been evicted
+
+
+@dataclasses.dataclass
+class _Suspended:
+    """A preempted request's carried state, keyed by request id until the
+    scheduler hands the request back to admission.
+
+    ``spill`` is None on the recompute path (resume re-prefills prompt +
+    generated-so-far from scratch) and, on the spill path, the host-side
+    mirror of everything the slot held: the block-chain payload (paged) or
+    the batch-1 slab tree, the pool position, the prefill bookkeeping and
+    the held next-token logits row — enough to restore the slot bitwise
+    and continue as if the eviction never happened."""
+
+    generated: list
+    admit_step: int
+    admit_time: float
+    first_token_step: int
+    first_token_time: float
+    preemptions: int
+    spill: Optional[dict] = None
 
 
 class ContinuousEngine:
@@ -234,7 +262,9 @@ class ContinuousEngine:
                  scheduler: Optional[FCFSScheduler] = None,
                  chunk: int = 8, block_size: int = 0, num_blocks: int = 0,
                  devices: int = 1, paged: Optional[bool] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 sched: str = "fcfs", preempt: str = "off",
+                 aging_steps: int = 64, shed_backlog: int = 0):
         self.model, self.params, self.cfg = model, params, cfg
         self.num_slots, self.max_seq = int(num_slots), int(max_seq)
         self.chunk = int(chunk)
@@ -244,6 +274,33 @@ class ContinuousEngine:
             raise ValueError(
                 f"chunk {chunk} must be in [1, {limit}] "
                 "(cache ring capacity bounds the per-tick chunk)"
+            )
+        # SLA control plane: the scheduling policy ('fcfs' | 'priority') is
+        # an engine kwarg (not just a scheduler instance) so reset() can
+        # rebuild an equivalent scheduler for replay — a bench rep must not
+        # silently fall back to FCFS.  Preemption ('off' | 'recompute' |
+        # 'spill') requires the priority policy: its victim-eligibility
+        # check is the scheduler's rank rule, and under FCFS a requeued
+        # victim becomes the head again and admission would thrash.
+        if sched not in ("fcfs", "priority"):
+            raise ValueError(f"sched must be 'fcfs' or 'priority', got {sched!r}")
+        if preempt not in ("off", "recompute", "spill"):
+            raise ValueError(
+                f"preempt must be 'off', 'recompute' or 'spill', got {preempt!r}"
+            )
+        self.sched_policy = sched
+        self.preempt_mode = preempt
+        self.aging_steps = int(aging_steps)
+        self.shed_backlog = int(shed_backlog)
+        if isinstance(scheduler, PriorityScheduler):
+            # adopt the instance's policy so reset() rebuilds an equivalent
+            self.sched_policy = "priority"
+            self.aging_steps = scheduler.aging_steps
+            self.shed_backlog = scheduler.shed_backlog
+        if self.preempt_mode != "off" and self.sched_policy != "priority":
+            raise ValueError(
+                "preempt requires sched='priority' (or a PriorityScheduler "
+                "instance): victim eligibility is the priority rank rule"
             )
         # Slot-pool sharding over the batch axis: devices=N builds a 1-D
         # ('data',) mesh, the pools place every cache leaf with a slot-axis
@@ -425,9 +482,25 @@ class ContinuousEngine:
         self._prefix_prompt_tokens = 0
         self._prefix_hit_requests = 0
         self.request_prefix_hits: dict[int, dict] = {}
-        self.scheduler = scheduler or FCFSScheduler(
-            chunk_grid=self.chunk, prefix_cache=self.prefix
-        )
+        # SLA control-plane state: suspended (preempted, not yet resumed)
+        # requests by id, counters, and the deterministic event trace —
+        # every admission/resume/preempt/reject/finish lands here with its
+        # step stamp, so two same-seed runs can be compared event by event.
+        self._suspended: dict[int, _Suspended] = {}
+        self._preemptions = 0
+        self._resumes = 0
+        self._rejections = 0
+        self.event_log: list[tuple] = []
+        self.scheduler = scheduler or self._make_scheduler()
+
+    def _make_scheduler(self) -> FCFSScheduler:
+        """The policy-equivalent scheduler reset() rebuilds for replay."""
+        if self.sched_policy == "priority":
+            return PriorityScheduler(
+                chunk_grid=self.chunk, prefix_cache=self.prefix,
+                aging_steps=self.aging_steps, shed_backlog=self.shed_backlog,
+            )
+        return FCFSScheduler(chunk_grid=self.chunk, prefix_cache=self.prefix)
 
     # ---------------------------------------------------------- jitted step --
     def _pin(self, x, sharding):
@@ -579,7 +652,14 @@ class ContinuousEngine:
         reservation), so one hot device cannot strand free slots elsewhere.
         With one device this degenerates to the historical global FIFO."""
         admitted = []
-        while self.pool.num_free:
+        self._tick_admitted: set[int] = set()  # slots filled this pass
+        # Backpressure first: under saturation, shed arrived batch backlog
+        # beyond the watermark before anyone queues behind it.  FCFS's
+        # poll_shed is a no-op; the PriorityScheduler sheds head-ordered.
+        live_units, unit_fn = self._shed_signal()
+        for req in self.scheduler.poll_shed(self.step_count, live_units, unit_fn):
+            self._reject(req)
+        while True:
             head = self.scheduler.peek_ready(self.step_count)
             if head is None:
                 break
@@ -603,8 +683,13 @@ class ContinuousEngine:
             # device-local), provided that device can still take it; the
             # reservation then charges only the unshared tail.  Misses (and
             # hits whose device is full) fall through to least-loaded.
+            # Resuming (previously preempted) requests skip the lookup: the
+            # spill path must rebuild the exact chain the payload was
+            # gathered from, and the recompute path re-prefills a prompt +
+            # generated sequence the prompt-only radix index doesn't cover.
             hit = device = None
-            if self.prefix is not None:
+            resuming = head.id in self._suspended
+            if self.prefix is not None and not resuming:
                 # cap at prompt_len - 1: the sampled first token needs the
                 # request's own final prompt position to run through prefill
                 hit = self.prefix.lookup(head.tokens, cap=head.prompt_len - 1)
@@ -615,11 +700,17 @@ class ContinuousEngine:
                         device = d
                     else:
                         hit = None
-            if device is None:
+            if device is None and self.pool.num_free:
                 device = self.pool.pick_device(footprint if self.paged else 0)
             if device is None:
-                break  # admit on free *blocks*: FCFS head waits for recycling
+                # no device can take the head: an interactive head may evict
+                # a batch victim it outranks; otherwise it waits for
+                # recycling (admit gates on free *blocks* under paging)
+                if self._try_preempt(head):
+                    continue  # retry placement with the victim's resources
+                break
             req = self.scheduler.pop_ready(self.step_count)
+            sus = self._suspended.pop(req.id, None)
             slot = (
                 self.pool.allocate(reserve_tokens=footprint, device=device,
                                    prefix=hit)
@@ -636,43 +727,206 @@ class ContinuousEngine:
                 dt = jnp.dtype(self.model.cfg.dtype)
                 fresh = {**fresh,
                          "patches": jnp.asarray(req.extras["patches"])[None].astype(dt)}
-            shared = hit.shared_len if hit is not None else 0
-            self.pool.insert(fresh, slot, position=shared)
-            padded = req.padded_tokens
-            if shared:
-                # prefill starts at the shared length, so the chunk slices
-                # run [shared + k*chunk : ... + chunk): re-pad the prompt to
-                # cover the last (possibly overhanging) slice — grid-aligned
-                # padding from intake can be too short when ``shared`` is
-                # not chunk-aligned
-                need = shared + -(-(req.prompt_len - shared) // self.chunk) * self.chunk
-                if padded is None or padded.shape[0] < need:
-                    toks = np.asarray(req.tokens, np.int32)
-                    padded = np.concatenate(
-                        [toks, np.zeros(need - toks.shape[0], np.int32)]
-                    )
-                self._prefix_hit_tokens += shared
-                self._prefix_hit_requests += 1
-                self.request_prefix_hits[req.id] = {
-                    "tokens": shared,
-                    "blocks": len(hit.blocks),
-                    "forked": hit.tail_src is not None,
-                    "device": hit.device,
-                }
-            elif padded is None or padded.shape[0] % self.chunk:
-                padded = pad_to_grid(req.tokens, self.chunk)
-            if self.prefix is not None:
+            if sus is not None and sus.spill is not None:
+                # --- spill resume: restore the evicted KV bitwise ---------
+                sp = sus.spill
+                if self.paged:
+                    # insert() sets the position and ensures a fresh chain
+                    # of exactly the spilled length; the scatter then fills
+                    # it with the gathered values (physical ids may differ —
+                    # only logical block order matters)
+                    self.pool.insert(fresh, slot, position=sp["position"])
+                    self.pool.restore_blocks(slot, sp["kv"])
+                else:
+                    self.pool.insert(sp["kv"], slot, position=sp["position"])
+                self._last_logits = self._put(
+                    self._last_logits.at[slot].set(jnp.asarray(sp["last_logits"])),
+                    self._sh_row,
+                )
+                padded, written = sp["padded"], sp["written"]
+                phase, prefill_len = sp["phase"], sp["prefill_len"]
+            elif sus is not None:
+                # --- recompute resume: re-prefill prompt + generated ------
+                # Chunked prefill is token-identical to the decode path that
+                # originally produced these tokens (the PR 2 invariant), so
+                # after the re-prefill the held logits row is exactly the
+                # next-token distribution the uninterrupted run would hold.
+                seq = np.concatenate([
+                    np.asarray(req.tokens, np.int32),
+                    np.asarray(sus.generated, np.int32),
+                ])
+                prefill_len = int(seq.shape[0])
+                padded = pad_to_grid(seq, self.chunk)
+                self.pool.insert(fresh, slot, position=0)
+                written, phase = 0, "prefilling"
+            else:
+                shared = hit.shared_len if hit is not None else 0
+                self.pool.insert(fresh, slot, position=shared)
+                padded = req.padded_tokens
+                if shared:
+                    # prefill starts at the shared length, so the chunk
+                    # slices run [shared + k*chunk : ... + chunk): re-pad
+                    # the prompt to cover the last (possibly overhanging)
+                    # slice — grid-aligned padding from intake can be too
+                    # short when ``shared`` is not chunk-aligned
+                    need = shared + -(-(req.prompt_len - shared) // self.chunk) * self.chunk
+                    if padded is None or padded.shape[0] < need:
+                        toks = np.asarray(req.tokens, np.int32)
+                        padded = np.concatenate(
+                            [toks, np.zeros(need - toks.shape[0], np.int32)]
+                        )
+                    self._prefix_hit_tokens += shared
+                    self._prefix_hit_requests += 1
+                    self.request_prefix_hits[req.id] = {
+                        "tokens": shared,
+                        "blocks": len(hit.blocks),
+                        "forked": hit.tail_src is not None,
+                        "device": hit.device,
+                    }
+                elif padded is None or padded.shape[0] % self.chunk:
+                    padded = pad_to_grid(req.tokens, self.chunk)
+                written, phase = shared, "prefilling"
+                prefill_len = req.prompt_len
+            if self.prefix is not None and not resuming:
                 self._prefix_prompt_tokens += req.prompt_len
             temp = self.cfg.temperature if req.temperature is None else req.temperature
             self._temps[slot] = float(temp)
             self._slots[slot] = _SlotState(
-                req=req, admit_step=self.step_count,
-                admit_time=time.time(), generated=[],
-                phase="prefilling", padded=padded, written=shared,
+                req=req,
+                admit_step=sus.admit_step if sus else self.step_count,
+                admit_time=sus.admit_time if sus else time.time(),
+                generated=sus.generated if sus else [],
+                phase=phase, padded=padded, written=written,
+                prefill_len=prefill_len,
+                first_token_step=sus.first_token_step if sus else -1,
+                first_token_time=sus.first_token_time if sus else 0.0,
+                preemptions=sus.preemptions if sus else 0,
             )
             self._lanes_dirty = True
+            self._tick_admitted.add(slot)
+            if sus is not None:
+                self._resumes += 1
+                self.event_log.append(
+                    ("resume", self.step_count, req.id, slot, device)
+                )
+            else:
+                self.event_log.append(
+                    ("admit", self.step_count, req.id, slot, device)
+                )
             admitted.append(req.id)
         return admitted
+
+    def _shed_signal(self) -> tuple:
+        """(live reservation, per-request footprint fn) in the pool's
+        admission units — blocks under paging, slots under a slab — for the
+        scheduler's backpressure watermark."""
+        if self.paged:
+            return (
+                self.pool.blocks_reserved,
+                lambda r: self.pool.blocks_for(r.prompt_len + r.max_new_tokens),
+            )
+        return self.pool.num_used, lambda r: 1
+
+    def _try_preempt(self, head: Request) -> bool:
+        """Evict one batch victim so ``head`` (an interactive request that
+        would otherwise queue) can place.  Victim selection is LIFO over the
+        live batch slots the head *outranks under the scheduler's own rank
+        rule* — the same step-independent order that decides admission, so
+        an aged batch request that would beat the head in the queue can't
+        be evicted by it either (no admit/preempt livelock).  LIFO (latest
+        admission first) preempts the least sunk cost and mirrors the
+        requeue-front resume order: the last victim out is the first back
+        in.  Slots admitted this very pass are exempt — a resumed victim
+        can't be re-evicted before it runs a single tick."""
+        if self.preempt_mode == "off" or head.req_class != "interactive":
+            return False
+        outranks = getattr(self.scheduler, "outranks", None)
+        best = None
+        for s, st in enumerate(self._slots):
+            if st is None or st.req.req_class != "batch":
+                continue
+            if s in self._tick_admitted:
+                continue
+            if outranks is not None and not outranks(
+                head.arrival_step, st.req.arrival_step
+            ):
+                continue  # victim has aged past the head: immune
+            if best is None or (st.admit_step, s) > (
+                self._slots[best].admit_step, best
+            ):
+                best = s
+        if best is None:
+            return False
+        self._preempt(best)
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s request and requeue it at the head of its class.
+
+        Spill mode mirrors the slot's KV to host first (block-chain gather
+        under paging, batch-1 slab extract otherwise) along with the held
+        logits row and the prefill bookkeeping — resume restores all of it
+        bitwise.  Recompute mode just drops the chain: resume re-prefills
+        prompt + generated-so-far.  Either way the freed blocks are
+        recycled *unzeroed* into other requests' chains — the GN guarantee
+        (masked scores -> exactly-zero numerators) makes eviction a
+        table/length edit, never a memory edit."""
+        st = self._slots[slot]
+        rid = st.req.id
+        spill = None
+        if self.preempt_mode == "spill":
+            if self.paged:
+                kv = self.pool.extract_blocks(slot)
+            else:
+                kv = jax.tree.map(np.asarray, self.pool.extract(slot))
+            spill = {
+                "kv": kv,
+                "position": int(self.pool.positions[slot]),
+                "padded": st.padded,
+                "written": st.written,
+                "prefill_len": st.prefill_len,
+                "phase": st.phase,
+                "last_logits": np.asarray(self._last_logits[slot]),
+            }
+        self._suspended[rid] = _Suspended(
+            generated=st.generated,
+            admit_step=st.admit_step,
+            admit_time=st.admit_time,
+            first_token_step=st.first_token_step,
+            first_token_time=st.first_token_time,
+            preemptions=st.preemptions + 1,
+            spill=spill,
+        )
+        self._slots[slot] = None
+        self.pool.free(slot)
+        self.scheduler.requeue_front(st.req)
+        self._preemptions += 1
+        self._lanes_dirty = True
+        self.event_log.append(
+            ("preempt", self.step_count, rid, self.preempt_mode, slot)
+        )
+
+    def _reject(self, req: Request) -> None:
+        """Record a shed request as a completion with finish_reason
+        'rejected' — the client-visible load-shedding verdict."""
+        now = time.time()
+        self.completions.append(Completion(
+            request_id=req.id,
+            prompt_tokens=np.asarray(req.tokens, np.int32),
+            new_tokens=np.zeros(0, np.int32),
+            finish_reason="rejected",
+            arrival_step=req.arrival_step,
+            admit_step=-1,
+            first_token_step=-1,
+            finish_step=self.step_count,
+            admit_time=now,
+            first_token_time=now,
+            finish_time=now,
+            req_class=req.req_class,
+            preemptions=0,
+        ))
+        self._rejections += 1
+        self.event_log.append(("reject", self.step_count, req.id))
 
     def _prefix_insert(self, slot: int, up_to: int) -> None:
         """Index ``slot``'s prompt prefix [0, up_to) in the radix cache.
@@ -693,7 +947,11 @@ class ContinuousEngine:
 
     def _finish(self, slot: int, reason: str) -> None:
         st = self._slots[slot]
-        if self.prefix is not None and st.written == st.req.prompt_len:
+        # written >= prompt_len: a recompute-resumed slot prefilled past the
+        # prompt (prompt + generated), but its first blocks_for(prompt_len)
+        # chain entries still hold exactly the prompt KV, so the tail insert
+        # stays valid
+        if self.prefix is not None and st.written >= st.req.prompt_len:
             bs = self.pool.block_size
             if st.req.prompt_len % bs:
                 self._prefix_insert(slot, st.req.prompt_len)
@@ -710,7 +968,10 @@ class ContinuousEngine:
             admit_time=st.admit_time,
             first_token_time=st.first_token_time,
             finish_time=now,
+            req_class=st.req.req_class,
+            preemptions=st.preemptions,
         ))
+        self.event_log.append(("finish", self.step_count, st.req.id, reason))
         self._slots[slot] = None
         self.pool.free(slot)
         self._lanes_dirty = True
@@ -723,7 +984,17 @@ class ContinuousEngine:
         live = [s for s, st in enumerate(self._slots) if st is not None]
         if not live:
             if self.scheduler.has_pending():
-                self.step_count += 1  # idle tick: waiting on a future arrival
+                # Idle fast-forward: no slot is live and every queued
+                # request's arrival is in the future, so jump the clock
+                # straight to the next arrival.  Replay-identical to
+                # burning the ticks one by one — nothing observable (no
+                # arrival, admission, shed or decode) can happen on a
+                # skipped tick, and the shed scan stops at the first
+                # not-yet-arrived request so it could not have fired.
+                nxt = self.scheduler.next_ready_step()
+                self.step_count = max(
+                    self.step_count + 1, nxt if nxt is not None else 0
+                )
                 return True
             return False
 
@@ -741,7 +1012,7 @@ class ContinuousEngine:
         takes: dict[int, int] = {}
         for s in prefills:
             st = self._slots[s]
-            takes[s] = min(self.chunk, st.req.prompt_len - st.written)
+            takes[s] = min(self.chunk, st.prefill_len - st.written)
         paged_args = ()
         if self.paged:
             # allocate blocks for the positions this tick will write, then
@@ -809,7 +1080,7 @@ class ContinuousEngine:
         for slot in prefills:
             st = self._slots[slot]
             st.written += takes[slot]
-            if st.written == st.req.prompt_len:
+            if st.written == st.prefill_len:
                 st.phase = "decoding"  # first token samples next tick
                 if self.prefix is not None:
                     bs = self.pool.block_size
@@ -836,7 +1107,10 @@ class ContinuousEngine:
         order."""
         for req in requests:
             self.submit(req)
-        budget = 10_000 + sum(
+        # 2x per-request work: a preempted request pays (part of) its
+        # prefill again on resume; the 10k constant absorbs pathological
+        # preemption churn beyond that
+        budget = 10_000 + 2 * sum(
             r.arrival_step + r.max_new_tokens + -(-r.prompt_len // self.chunk)
             for r in requests
         )
@@ -894,6 +1168,14 @@ class ContinuousEngine:
             ),
             "kv_paged": self.paged,
             "kv_hbm_bytes": self.pool.hbm_bytes(),
+            # SLA control plane: policy knobs + the preemption/shedding
+            # counters the sla bench scenario reports per configuration
+            "sched": self.sched_policy,
+            "preempt_mode": self.preempt_mode,
+            "preemptions": self._preemptions,
+            "preempt_resumes": self._resumes,
+            "rejections": self._rejections,
+            "shed_count": getattr(self.scheduler, "shed_count", 0),
             # slot-pool sharding over the batch axis (devices=1 -> one range,
             # balance trivially 1.0; see docs/serving.md §Device mesh)
             "num_devices": self.num_devices,

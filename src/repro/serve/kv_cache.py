@@ -41,6 +41,7 @@ from collections import deque
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -315,6 +316,11 @@ class BlockPagedKVPool(_SlotRanges):
         self._insert = jax.jit(model.insert_cache_slot_extras, donate_argnums=(0,))
         self.prefix_cache = None  # bound by attach_prefix_cache
         self._fork_jit = None  # lazy: one trace total (src/dst are traced)
+        # preemption spill/restore jits (lazy; indices are traced, so each
+        # retraces only per power-of-two padded chain length — the same
+        # bounded-compile discipline as the horizon buckets)
+        self._spill_gather_jit = None
+        self._spill_scatter_jit = None
         self.reset()
 
     # ------------------------------------------------------------ residency --
@@ -647,6 +653,73 @@ class BlockPagedKVPool(_SlotRanges):
                 f"COW violation: slot {slot} would write block {chain[idx]} "
                 f"with refcount {int(self.refcounts[chain[idx]])}"
             )
+
+    # ----------------------------------------------------- preemption spill --
+    def _spill_pad(self, n: int) -> int:
+        """Chain length padded to the next power of two (capped at
+        ``max_blocks_per_slot``) so the spill gather/scatter jits compile
+        once per bucket, not once per chain length."""
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.max_blocks_per_slot)
+
+    def extract_blocks(self, slot: int) -> dict:
+        """Read ``slot``'s block chain out of the arenas into host memory —
+        the preemption *spill* path.  Returns ``{'len': n, 'layers': tree}``
+        where every ``layers`` leaf is ``(L, n_padded, block_size, ...)``
+        gathered at the chain's physical indices (padded by repeating the
+        last block, so restore's duplicate scatter lanes carry identical
+        values).  The payload is pure values — restoring it into a
+        *different* physical chain later is fine, which is exactly what
+        makes spilled blocks recyclable the moment the victim is evicted:
+        the GN mask guarantee means the recycled blocks need no zeroing,
+        and the spilled values need no fixed home."""
+        chain = list(self._slot_blocks[slot])
+        if not chain:
+            return {"len": 0, "layers": None}
+        npad = self._spill_pad(len(chain))
+        idx = np.asarray(chain + [chain[-1]] * (npad - len(chain)), np.int32)
+        if self._spill_gather_jit is None:
+            def gather(layers, ix):
+                return jax.tree.map(lambda l: jnp.take(l, ix, axis=1), layers)
+            self._spill_gather_jit = jax.jit(gather)
+        out = self._spill_gather_jit(self.cache["layers"], jnp.asarray(idx))
+        return {"len": len(chain), "layers": jax.tree.map(np.asarray, out)}
+
+    def restore_blocks(self, slot: int, payload: dict) -> None:
+        """Scatter a spilled payload back into ``slot``'s (freshly ensured)
+        block chain — the preemption *restore* path.  The chain's physical
+        ids are generally different from the ones the payload was gathered
+        from; only logical order matters.  Bitwise-exact: the scatter writes
+        the same values the gather read, and every lane beyond ``len``
+        duplicates logical block len-1 (index and data alike), so duplicate
+        scatter indices always carry identical values — deterministic under
+        any scatter ordering."""
+        n = int(payload["len"])
+        if n == 0:
+            return
+        chain = self._slot_blocks[slot]
+        if len(chain) < n:
+            raise ValueError(
+                f"slot {slot}: restore needs {n} blocks ensured, chain has "
+                f"{len(chain)} — call ensure(slot, position) first"
+            )
+        npad = self._spill_pad(n)
+        idx = np.asarray(chain[:n] + [chain[n - 1]] * (npad - n), np.int32)
+        if self._spill_scatter_jit is None:
+            def scatter(cache, host, ix):
+                out = dict(cache)
+                out["layers"] = jax.tree.map(
+                    lambda l, h: l.at[:, ix].set(h), cache["layers"], host
+                )
+                return out
+            self._spill_scatter_jit = jax.jit(scatter, donate_argnums=(0,))
+        self.cache = self._spill_scatter_jit(
+            self.cache,
+            jax.tree.map(jnp.asarray, payload["layers"]),
+            jnp.asarray(idx),
+        )
 
     # ------------------------------------------------------------- contents --
     def insert(self, request_cache, slot: int, position: int) -> None:

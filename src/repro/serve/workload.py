@@ -108,5 +108,69 @@ def shared_prefix_requests(
     return reqs
 
 
+def sla_requests(
+    cfg: ModelConfig,
+    n_requests: int = 32,
+    base_len: int = 16,
+    rate: float = 0.35,
+    burst_factor: float = 4.0,
+    interactive_frac: float = 0.5,
+    max_new_interactive: int = 6,
+    max_new_batch: int = 20,
+    seed: int = 13,
+) -> list[Request]:
+    """Open-loop bursty arrivals with SLA classes, for the `sla` scenario.
+
+    Arrivals follow a seeded two-state Markov-modulated Poisson process:
+    a calm state with mean inter-arrival ``1/rate`` engine steps and a
+    burst state running ``burst_factor`` times hotter; the state flips
+    with fixed seeded probabilities per arrival (sticky bursts), so the
+    trace alternates quiet stretches with pile-ups — the regime where
+    queue wait dominates TTFT and FCFS lets batch traffic block chat.
+
+    Each request is independently classed: ``interactive`` (short prompts
+    from {base/2, base}, ``max_new_interactive`` budget) with probability
+    ``interactive_frac``, else ``batch`` (longer prompts from
+    {base, 3*base/2, 2*base}, ``max_new_batch`` budget).  Everything —
+    arrivals, classes, lengths, token content — is a pure function of
+    ``seed``, so the same seed replays the identical
+    arrival/admission/preemption/shedding trace on the engine's step
+    clock.
+    """
+    rng = np.random.default_rng(seed)
+    short_lens = [max(4, base_len // 2), base_len]
+    long_lens = [base_len, base_len + base_len // 2, 2 * base_len]
+    reqs = []
+    clock = 0.0
+    burst = False
+    for i in range(n_requests):
+        # sticky two-state modulation: ~25% chance to enter a burst,
+        # ~70% chance to stay in one
+        burst = rng.random() < (0.70 if burst else 0.25)
+        eff_rate = rate * (burst_factor if burst else 1.0)
+        clock += rng.exponential(1.0 / eff_rate)
+        is_interactive = rng.random() < interactive_frac
+        if is_interactive:
+            plen = short_lens[int(rng.integers(len(short_lens)))]
+            new = max_new_interactive
+            klass = "interactive"
+        else:
+            plen = long_lens[int(rng.integers(len(long_lens)))]
+            new = max_new_batch
+            klass = "batch"
+        data = DataConfig(vocab=cfg.vocab, seq_len=plen, global_batch=1,
+                          seed=seed + 1000 + i)
+        tokens = np.asarray(batch_at(data, 0)["tokens"][0], np.int32)
+        reqs.append(Request(
+            id=i,
+            tokens=tokens,
+            max_new_tokens=new,
+            arrival_step=int(clock),
+            extras=_extras_for(cfg),
+            req_class=klass,
+        ))
+    return reqs
+
+
 def required_max_seq(requests) -> int:
     return max(r.prompt_len + r.max_new_tokens for r in requests)

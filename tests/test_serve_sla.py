@@ -1,0 +1,525 @@
+"""SLA-aware serving tests (PR 7): priority scheduling, block-level
+preemption with exact resume, and graceful overload degradation.
+
+Pinned invariants:
+  1. exact resume: a preempted-then-resumed request's greedy tokens are
+     IDENTICAL to the uninterrupted static oracle, for both preemption
+     mechanisms (``recompute``: free the block chain, re-prefill
+     prompt+generated as an extended prompt; ``spill``: host-mirror the
+     chain payload + held logits, restore bitwise into a freshly-ensured
+     chain) — on dense and MLA caches, slab and paged pools, with and
+     without the prefix cache.  The GN guarantee is what makes the
+     recycled/restored blocks safe without zeroing: masked scores produce
+     exactly-zero numerators, so stale block contents beyond the written
+     horizon are never read into a normalized distribution;
+  2. determinism: the same seed replays the identical arrival/admission/
+     preemption/eviction trace (``event_log``) after ``reset()``;
+  3. the aging bound: an interactive head outranks a batch head iff
+     ``i.arrival < b.arrival + aging_steps`` — step-independent, so batch
+     traffic is delayed at most ``aging_steps`` of interactive arrivals
+     and can never starve, and the engine reuses the same rule for
+     preemption victim eligibility (no admit/preempt livelock);
+  4. graceful degradation: beyond the ``shed_backlog`` watermark, arrived
+     batch backlog is rejected (``finish_reason='rejected'``) head-ordered
+     and deterministically; interactive and preempted-resumed requests
+     are never shed;
+  5. compile counters stay exact under preemption/resume: one trace per
+     (step kind, horizon bucket), prefill = 0 — eviction, spill/restore
+     and re-admission must not add a single step compilation;
+  6. the engine clock fast-forwards over provably-idle ticks (no live
+     slot, no arrived request) without changing the event trace;
+  7. completions carry arrival-anchored step-clock SLA fields
+     (``queue_wait_steps``, ``ttft_steps``, ``tpot_steps``) next to the
+     wall-clock ones.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduce_config
+from repro.data.synthetic import DataConfig, batch_at
+from repro.models.transformer import make_model
+from repro.serve.engine import ContinuousEngine, ServeConfig, static_reference
+from repro.serve.scheduler import (
+    Completion,
+    FCFSScheduler,
+    PriorityScheduler,
+    Request,
+)
+from repro.serve.workload import required_max_seq, sla_requests
+
+from _serve_helpers import assert_exact_compile_counters
+
+CHUNK = 4
+TWO_DEV = jax.device_count() >= 2
+requires_mesh = pytest.mark.skipif(
+    not TWO_DEV,
+    reason="needs >= 2 devices "
+    "(export XLA_FLAGS=--xla_force_host_platform_device_count=2)",
+)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = reduce_config(get_config("internlm2-1.8b"))
+    model = make_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def mla():
+    cfg = reduce_config(get_config("minicpm3-4b"))
+    model = make_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompt(cfg, length, seed):
+    data = DataConfig(vocab=cfg.vocab, seq_len=length, global_batch=1, seed=seed)
+    return np.asarray(batch_at(data, 0)["tokens"][0], np.int32)
+
+
+def _preempt_reqs(cfg, slots=2):
+    """Force a preemption: ``slots`` long batch requests saturate every
+    slot at step 0, then an interactive request arrives mid-decode with no
+    free slot — admission must evict a batch victim to serve it."""
+    batch = [
+        Request(id=i, tokens=_prompt(cfg, 9 + i, 400 + i), max_new_tokens=10,
+                arrival_step=0, req_class="batch")
+        for i in range(slots)
+    ]
+    inter = [
+        Request(id=slots, tokens=_prompt(cfg, 6, 410), max_new_tokens=4,
+                arrival_step=8, req_class="interactive")
+    ]
+    return batch + inter
+
+
+def _assert_oracle_identity(comps, oracle, tag=""):
+    for c in comps:
+        if c.finish_reason == "rejected":
+            continue
+        ref = oracle[c.request_id]
+        assert c.tokens.shape == ref.shape and np.array_equal(c.tokens, ref), (
+            f"{tag} req {c.request_id}: resumed output diverged from the "
+            f"uninterrupted oracle"
+        )
+
+
+# ------------------------------------------ exact resume: paged, dense+MLA --
+@pytest.mark.parametrize("mode", ["recompute", "spill"])
+@pytest.mark.parametrize(
+    "family",
+    ["dense", pytest.param("mla", marks=pytest.mark.slow)],
+)
+def test_preempt_resume_identity_paged(dense, mla, family, mode):
+    cfg, model, params = dense if family == "dense" else mla
+    reqs = _preempt_reqs(cfg)
+    scfg = ServeConfig()
+    oracle = static_reference(model, params, reqs, scfg)
+    engine = ContinuousEngine(model, params, num_slots=2, max_seq=32,
+                              cfg=scfg, chunk=CHUNK,
+                              sched="priority", preempt=mode)
+    comps = engine.run(reqs)
+    assert len(comps) == len(reqs)
+    _assert_oracle_identity(comps, oracle, f"{family}/{mode}")
+    m = engine.metrics()
+    assert m["preemptions"] >= 1 and m["preempt_resumes"] == m["preemptions"]
+    # the victim's completion records its eviction count; the interactive
+    # request that triggered it was never preempted itself
+    by_id = {c.request_id: c for c in comps}
+    assert sum(c.preemptions for c in comps) == m["preemptions"]
+    assert by_id[2].preemptions == 0 and by_id[2].req_class == "interactive"
+    # invariant 5: eviction/resume adds no step compilations, no prefill
+    # jits (recompute-resume re-prefills through the same fused step)
+    assert_exact_compile_counters(m)
+    # drained clean: every block chain was freed or restored exactly once
+    assert engine.pool.blocks_in_use == 0
+    # invariant 2: a reset engine replays the identical event trace
+    trace = list(engine.event_log)
+    assert any(e[0] == "preempt" for e in trace)
+    assert any(e[0] == "resume" for e in trace)
+    engine.reset()
+    replay = engine.run(reqs)
+    assert engine.event_log == trace
+    assert {c.request_id: c.tokens.tolist() for c in replay} == {
+        c.request_id: c.tokens.tolist() for c in comps
+    }
+
+
+# --------------------------------------------------- exact resume: slab ----
+@pytest.mark.parametrize(
+    "mode",
+    ["spill", pytest.param("recompute", marks=pytest.mark.slow)],
+)
+def test_preempt_resume_identity_slab(dense, mode):
+    """Slab pool: the 'chain' is the whole slot row; spill mirrors
+    ``pool.extract`` and restores via ``insert(payload, slot, position)``."""
+    cfg, model, params = dense
+    reqs = _preempt_reqs(cfg)
+    scfg = ServeConfig()
+    oracle = static_reference(model, params, reqs, scfg)
+    engine = ContinuousEngine(model, params, num_slots=2, max_seq=32,
+                              cfg=scfg, chunk=CHUNK, paged=False,
+                              sched="priority", preempt=mode)
+    comps = engine.run(reqs)
+    _assert_oracle_identity(comps, oracle, f"slab/{mode}")
+    m = engine.metrics()
+    assert m["preemptions"] >= 1
+    assert_exact_compile_counters(m)
+
+
+# ------------------------------------------- exact resume + prefix cache ---
+@pytest.mark.parametrize(
+    "mode",
+    ["spill", pytest.param("recompute", marks=pytest.mark.slow)],
+)
+def test_preempt_resume_identity_with_prefix_cache(dense, mode):
+    """Preemption composes with prefix sharing: a victim whose chain holds
+    attached (refcount > 1) cache blocks releases its references at
+    eviction; resume rebuilds privately-owned blocks (spill restores the
+    shared values into them bitwise) and stays oracle-identical.  Resumed
+    admissions skip the prefix lookup — matching a cached chain against a
+    prompt whose KV is being restored would double-attach."""
+    cfg, model, params = dense
+    # two batch requests share a 9-token prompt prefix so the victim's
+    # chain really does hold cache-indexed blocks when it is evicted
+    base = _prompt(cfg, 12, seed=500)
+    b0 = base[:9]
+    reqs = [
+        Request(id=0, tokens=b0, max_new_tokens=10, arrival_step=0,
+                req_class="batch"),
+        Request(id=1, tokens=base, max_new_tokens=10, arrival_step=1,
+                req_class="batch"),
+        Request(id=2, tokens=_prompt(cfg, 6, 510), max_new_tokens=4,
+                arrival_step=10, req_class="interactive"),
+    ]
+    scfg = ServeConfig()
+    oracle = static_reference(model, params, reqs, scfg)
+    engine = ContinuousEngine(model, params, num_slots=2, max_seq=32,
+                              cfg=scfg, chunk=CHUNK, prefix_cache=True,
+                              num_blocks=24,
+                              sched="priority", preempt=mode)
+    comps = engine.run(reqs)
+    _assert_oracle_identity(comps, oracle, f"prefix/{mode}")
+    m = engine.metrics()
+    assert m["preemptions"] >= 1
+    assert m["prefix_cache"] is True
+    assert_exact_compile_counters(m)
+    # drained: only cache-held chains remain resident
+    assert engine.pool.num_free == engine.pool.num_slots
+    assert engine.pool.blocks_in_use == engine.pool.cached_blocks
+
+
+# ------------------------------------------------------ full sla workload --
+def test_sla_workload_trace_determinism(dense):
+    """The bench scenario in miniature: a seeded bursty two-class workload
+    served under priority + preemption is oracle-identical and replays the
+    exact event trace (admit/resume/preempt/reject/finish, with steps)."""
+    cfg, model, params = dense
+    reqs = sla_requests(cfg, n_requests=8, base_len=8, rate=0.6, seed=13,
+                        max_new_interactive=4, max_new_batch=8)
+    # seeded generator determinism, field by field
+    again = sla_requests(cfg, n_requests=8, base_len=8, rate=0.6, seed=13,
+                         max_new_interactive=4, max_new_batch=8)
+    for a, b in zip(reqs, again):
+        assert (a.arrival_step, a.req_class, a.max_new_tokens) == (
+            b.arrival_step, b.req_class, b.max_new_tokens)
+        assert np.array_equal(a.tokens, b.tokens)
+    assert {r.req_class for r in reqs} == {"interactive", "batch"}
+
+    scfg = ServeConfig()
+    oracle = static_reference(model, params, reqs, scfg)
+    engine = ContinuousEngine(model, params, num_slots=2,
+                              max_seq=required_max_seq(reqs), cfg=scfg,
+                              chunk=CHUNK, sched="priority", preempt="spill",
+                              aging_steps=32)
+    comps = engine.run(reqs)
+    assert len(comps) == len(reqs)
+    _assert_oracle_identity(comps, oracle, "sla-workload")
+    trace = list(engine.event_log)
+    engine.reset()
+    engine.run(reqs)
+    assert engine.event_log == trace
+    assert_exact_compile_counters(engine.metrics())
+
+
+# ------------------------------------------------------- the aging bound ---
+def test_aging_prevents_batch_starvation(dense):
+    """One slot, occupied by a long interactive request when a batch
+    request arrives at step 1, with a steady interactive stream behind
+    it.  With ``aging_steps=6`` only interactive requests arriving
+    strictly before 1 + 6 = 7 outrank the batch head — later ones queue
+    behind it, so the batch request is admitted (and completes) despite a
+    continuous interactive supply.  FCFS-order within each class holds."""
+    cfg, model, params = dense
+    reqs = [Request(id=0, tokens=_prompt(cfg, 8, 600), max_new_tokens=6,
+                    arrival_step=0, req_class="interactive"),
+            Request(id=1, tokens=_prompt(cfg, 8, 601), max_new_tokens=4,
+                    arrival_step=1, req_class="batch")]
+    reqs += [
+        Request(id=2 + i, tokens=_prompt(cfg, 4, 610 + i), max_new_tokens=2,
+                arrival_step=2 + 2 * i, req_class="interactive")
+        for i in range(6)  # arrivals 2,4,...,12 — 3 outrank the batch head
+    ]
+    scfg = ServeConfig()
+    oracle = static_reference(model, params, reqs, scfg)
+    engine = ContinuousEngine(model, params, num_slots=1, max_seq=16,
+                              cfg=scfg, chunk=CHUNK,
+                              sched="priority", preempt="off", aging_steps=6)
+    comps = engine.run(reqs)
+    assert len(comps) == len(reqs)
+    _assert_oracle_identity(comps, oracle, "aging")
+    order = [e[2] for e in engine.event_log if e[0] == "admit"]
+    batch_pos = order.index(1)
+    # the starvation bound: every interactive admitted before the batch
+    # request arrived strictly less than aging_steps after it (rank rule:
+    # i.arrival < b.arrival + aging = 1 + 6); everything later aged out
+    # behind it — the batch request is bounded-delayed, never starved
+    before = order[:batch_pos]
+    after = order[batch_pos + 1:]
+    assert before and after, order  # the contest actually happened
+    assert all(reqs[i].arrival_step < 1 + 6 for i in before), order
+    assert all(reqs[i].arrival_step >= 1 + 6 for i in after), order
+    assert before == sorted(before) and after == sorted(after)  # FCFS in class
+    finished = {c.request_id: c.finish_reason for c in comps}
+    assert finished[1] == "length"  # the batch request was never starved
+
+
+# ------------------------------------------- backpressure: shedding --------
+def test_backpressure_sheds_batch_only_and_deterministically(dense):
+    """Paged pool, shed watermark below total demand: arrived batch
+    backlog beyond the watermark is rejected head-ordered; interactive
+    requests are never shed; rejected completions carry the arrival-
+    anchored step fields and empty tokens; the run drains clean and a
+    reset replays the identical rejection set."""
+    cfg, model, params = dense
+    # 4 batch + 2 interactive, all nearly simultaneous; footprints of
+    # 16+8=24 tokens = 6 blocks each (block_size=4)
+    reqs = [
+        Request(id=i, tokens=_prompt(cfg, 16, 700 + i), max_new_tokens=8,
+                arrival_step=0, req_class="batch")
+        for i in range(4)
+    ]
+    reqs += [
+        Request(id=4 + i, tokens=_prompt(cfg, 8, 720 + i), max_new_tokens=4,
+                arrival_step=1, req_class="interactive")
+        for i in range(2)
+    ]
+    scfg = ServeConfig()
+    oracle = static_reference(model, params, reqs, scfg)
+    # watermark: 2 batch footprints + the interactive demand fit; the
+    # 3rd/4th batch request would push reserved+queued past it
+    engine = ContinuousEngine(model, params, num_slots=2, max_seq=32,
+                              cfg=scfg, chunk=CHUNK,
+                              sched="priority", preempt="spill",
+                              shed_backlog=20)
+    comps = engine.run(reqs)
+    assert len(comps) == len(reqs)
+    rejected = [c for c in comps if c.finish_reason == "rejected"]
+    served = [c for c in comps if c.finish_reason != "rejected"]
+    assert rejected and all(c.req_class == "batch" for c in rejected)
+    assert {c.request_id for c in comps if c.req_class == "interactive"} <= {
+        c.request_id for c in served
+    }
+    for c in rejected:
+        assert c.admit_step == -1 and c.first_token_step == -1
+        assert c.ttft_steps == -1 and c.new_tokens.shape == (0,)
+        assert c.queue_wait_steps == c.finish_step - c.arrival_step >= 0
+    _assert_oracle_identity(comps, oracle, "shed")
+    m = engine.metrics()
+    assert m["rejections"] == len(rejected) == m["shed_count"]
+    assert engine.pool.blocks_in_use == 0  # drained despite rejections
+    rejected_ids = sorted(c.request_id for c in rejected)
+    engine.reset()
+    comps2 = engine.run(reqs)
+    assert sorted(c.request_id for c in comps2
+                  if c.finish_reason == "rejected") == rejected_ids
+
+
+def test_resumed_requests_are_never_shed(dense):
+    """A preempted victim re-enters its queue head as admitted debt: even
+    with a watermark that would reject it as a fresh submission, it is
+    counted as demand but never shed — the engine already spent prefill
+    on it, and dropping it would break the exact-resume contract."""
+    cfg, model, params = dense
+    reqs = _preempt_reqs(cfg)
+    scfg = ServeConfig()
+    oracle = static_reference(model, params, reqs, scfg)
+    # watermark chosen so the preempted victim's footprint (5 blocks) plus
+    # live reservations exceeds it at resume time — shed would drop it
+    engine = ContinuousEngine(model, params, num_slots=2, max_seq=32,
+                              cfg=scfg, chunk=CHUNK,
+                              sched="priority", preempt="spill",
+                              shed_backlog=10)
+    comps = engine.run(reqs)
+    m = engine.metrics()
+    assert m["preemptions"] >= 1
+    # every batch request either completed normally or was shed BEFORE it
+    # was ever admitted; the preempted one (which had been admitted) is
+    # guaranteed to have finished
+    preempted = [c for c in comps if c.preemptions > 0]
+    assert preempted and all(c.finish_reason == "length" for c in preempted)
+    _assert_oracle_identity(comps, oracle, "resume-shed")
+
+
+# -------------------------------------------------- idle fast-forward ------
+def test_idle_fast_forward_jumps_to_next_arrival(dense):
+    """A request arriving at step 400 on an empty engine must not cost 400
+    engine iterations: with no live slot the clock jumps to the earliest
+    queued arrival.  The completion's step fields anchor on arrival, so
+    the jump is observationally identical to burning the ticks."""
+    cfg, model, params = dense
+    reqs = [Request(id=0, tokens=_prompt(cfg, 8, 800), max_new_tokens=4,
+                    arrival_step=400, req_class="interactive")]
+    scfg = ServeConfig()
+    engine = ContinuousEngine(model, params, num_slots=1, max_seq=16,
+                              cfg=scfg, chunk=CHUNK, sched="priority")
+    for r in reqs:
+        engine.submit(r)
+    iters = 0
+    while engine.step():
+        iters += 1
+        assert iters < 50, "idle ticks were burned one by one"
+    (c,) = engine.completions
+    assert engine.step_count >= 400
+    assert c.admit_step >= 400 and c.queue_wait_steps == c.admit_step - 400
+    assert c.ttft_steps >= 0 and c.tpot_steps >= 1.0
+    # FCFS path fast-forwards too (head-blocking: jump to head arrival)
+    engine2 = ContinuousEngine(model, params, num_slots=1, max_seq=16,
+                               cfg=scfg, chunk=CHUNK, sched="fcfs")
+    engine2.submit(dataclasses.replace(reqs[0]))
+    iters = 0
+    while engine2.step():
+        iters += 1
+        assert iters < 50
+    assert engine2.step_count >= 400
+
+
+# ------------------------------------------------ scheduler unit tests -----
+def test_priority_scheduler_rank_rule_and_order():
+    tok = np.arange(4, dtype=np.int32)
+    s = PriorityScheduler(aging_steps=10)
+    s.submit(Request(tokens=tok, arrival_step=0, req_class="batch"))
+    s.submit(Request(tokens=tok, arrival_step=5, req_class="interactive"))
+    s.submit(Request(tokens=tok, arrival_step=12, req_class="interactive"))
+    # step 5: interactive head (arr 5) outranks batch head (arr 0): 5 < 10
+    assert s.peek_ready(5).req_class == "interactive"
+    # the rule is step-independent: still true at any later step
+    assert s.peek_ready(100).req_class == "interactive"
+    assert s.pop_ready(100).arrival_step == 5
+    # next interactive arrived at 12 >= 0 + 10: batch has aged past it
+    assert s.pop_ready(100).req_class == "batch"
+    assert s.pop_ready(100).arrival_step == 12
+    assert not s.has_pending()
+    # ties: outranks is strict '<' so arrival 10 vs batch 0 @ aging 10 loses
+    assert not s.outranks(10, 0)
+    assert s.outranks(9, 0)
+
+
+def test_priority_scheduler_next_ready_and_requeue():
+    tok = np.arange(4, dtype=np.int32)
+    s = PriorityScheduler(aging_steps=10)
+    s.submit(Request(tokens=tok, arrival_step=7, req_class="batch"))
+    s.submit(Request(tokens=tok, arrival_step=3, req_class="interactive"))
+    # min over both class heads (FCFS would be head-blocked per queue)
+    assert s.next_ready_step() == 3
+    assert s.peek_ready(2) is None
+    r = s.pop_ready(3)
+    assert r.arrival_step == 3
+    s.requeue_front(r)
+    assert r.id in s._resumed
+    assert s.pop_ready(3).id == r.id  # back at its class head
+    assert r.id not in s._resumed  # pop clears the resumed mark
+    fc = FCFSScheduler()
+    fc.submit(Request(tokens=tok, arrival_step=7))
+    fc.submit(Request(tokens=tok, arrival_step=3))
+    assert fc.next_ready_step() == 7  # FCFS is head-blocking by design
+
+
+def test_priority_scheduler_shed_watermark():
+    tok = np.arange(4, dtype=np.int32)
+    s = PriorityScheduler(aging_steps=10, shed_backlog=5)
+    ids = [s.submit(Request(tokens=tok, arrival_step=0, req_class="batch"))
+           for _ in range(4)]
+    s.submit(Request(tokens=tok, arrival_step=0, req_class="interactive"))
+    s.submit(Request(tokens=tok, arrival_step=50, req_class="batch"))
+    # units: 1 per request; live=1 + interactive 1 -> batch fits 3 more;
+    # the 4th arrived batch request breaches the watermark.  The batch
+    # request arriving at step 50 is beyond the arrived zone: untouched.
+    shed = s.poll_shed(0, 1, lambda r: 1)
+    assert [r.id for r in shed] == [ids[3]]
+    assert s.shed_count == 1
+    assert len(s) == 5  # 3 kept batch + 1 future batch + 1 interactive
+    # resumed (preempted) requests are demand, never shed
+    r = s.pop_ready(0)  # interactive head
+    v = s.pop_ready(0)  # batch head
+    s.requeue_front(v)
+    shed = s.poll_shed(0, 4, lambda r: 1)  # live 4 + resumed 1 == watermark
+    assert shed == [] or v.id not in [x.id for x in shed]
+    assert v.id in s._resumed
+
+
+def test_request_class_validation():
+    tok = np.arange(4, dtype=np.int32)
+    s = PriorityScheduler()
+    with pytest.raises(ValueError, match="req_class"):
+        s.submit(Request(tokens=tok, req_class="bulk"))
+    with pytest.raises(ValueError, match="aging_steps"):
+        PriorityScheduler(aging_steps=0)
+
+
+def test_engine_rejects_preempt_without_priority(dense):
+    cfg, model, params = dense
+    with pytest.raises(ValueError, match="priority"):
+        ContinuousEngine(model, params, num_slots=1, max_seq=16,
+                         chunk=CHUNK, sched="fcfs", preempt="spill")
+
+
+# ---------------------------------------- completion step-clock fields -----
+def test_completion_sla_fields():
+    c = Completion(
+        request_id=0, prompt_tokens=np.arange(4, dtype=np.int32),
+        new_tokens=np.arange(3, dtype=np.int32), finish_reason="length",
+        arrival_step=10, admit_step=14, first_token_step=16, finish_step=22,
+        admit_time=0.0, first_token_time=0.0, finish_time=0.0,
+        req_class="batch", preemptions=1,
+    )
+    assert c.queue_wait_steps == 4
+    assert c.ttft_steps == 6
+    assert c.tpot_steps == (22 - 16) / 2  # preemption gap inflates > 1.0
+    r = Completion(
+        request_id=1, prompt_tokens=np.arange(4, dtype=np.int32),
+        new_tokens=np.zeros(0, np.int32), finish_reason="rejected",
+        arrival_step=10, admit_step=-1, first_token_step=-1, finish_step=12,
+        admit_time=0.0, first_token_time=0.0, finish_time=0.0,
+        req_class="batch",
+    )
+    assert r.ttft_steps == -1
+    assert r.queue_wait_steps == 2  # wait-to-verdict for rejections
+    assert r.tpot_steps == 0.0
+
+
+# ------------------------------------------------------------ device mesh --
+@requires_mesh
+def test_preempt_resume_identity_two_devices(dense):
+    """2-device slot-pool sharding: preemption frees a victim on one
+    device shard, resume may land on either; tokens stay oracle-identical
+    and the trace replays."""
+    cfg, model, params = dense
+    reqs = _preempt_reqs(cfg, slots=2)
+    scfg = ServeConfig()
+    oracle = static_reference(model, params, reqs, scfg)
+    engine = ContinuousEngine(model, params, num_slots=2, max_seq=32,
+                              cfg=scfg, chunk=CHUNK, devices=2,
+                              sched="priority", preempt="spill")
+    comps = engine.run(reqs)
+    _assert_oracle_identity(comps, oracle, "2dev")
+    m = engine.metrics()
+    assert m["num_devices"] == 2 and m["preemptions"] >= 1
+    assert_exact_compile_counters(m)
+    trace = list(engine.event_log)
+    engine.reset()
+    engine.run(reqs)
+    assert engine.event_log == trace
