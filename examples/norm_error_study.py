@@ -8,8 +8,6 @@ Fig. 5: distribution of normalization error measured over transformer-scale
 
 Run:  PYTHONPATH=src python examples/norm_error_study.py
 """
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -12,17 +12,15 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full]
       PYTHONPATH=src python examples/train_lm.py --compare   # GN vs exact twin
 """
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import DataConfig, batch_at, optimal_perplexity
 from repro.models.transformer import make_model
 from repro.serve.engine import perplexity
-from repro.train.loop import make_eval_step, make_train_step
+from repro.train.loop import make_train_step
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 
 

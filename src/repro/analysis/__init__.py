@@ -1,0 +1,42 @@
+"""repro.analysis — static invariant auditor + recompile-hazard lint.
+
+Every guarantee the serving stack advertises (gather-free paged reads,
+donated in-place cache ticks, bounded compile counts per horizon bucket,
+no f64/upcast drift, no host transfers inside a tick) is enforced at
+runtime by counter asserts and identity oracles.  This package proves the
+same invariants *statically*, from the traced program:
+
+* **Pass A** (``audit``) lowers every jitted serving entry point — fused
+  and decode ticks, spill gather/scatter, prefix COW fork, slot insert —
+  to jaxpr + compiled HLO for each registry arch and asserts structural
+  invariants (see ``docs/analysis.md`` for the rule catalog).
+* **Pass B** (``lint``) is a repo-wide AST lint for recompile/correctness
+  hazards: Python branching or casts on traced values inside jitted
+  functions, hash-unstable static args, mutable default args, ``np.``
+  leaking into traced code, rebinding a donated buffer after use.
+
+CLI: ``python -m repro.analysis --all`` (CI gate).  Each rule carries a
+known-bad fixture it must flag and a known-good twin it must pass
+(``--self-check``); ``--break-invariant RULE`` feeds the bad fixture
+through the real pipeline and must exit non-zero with that rule id.
+"""
+from repro.analysis.findings import Finding, Report
+from repro.analysis.rules import ALL_RULES, AUDIT_RULES, LINT_RULES
+from repro.analysis.tracekeys import (
+    compile_bound,
+    format_trace_key_diff,
+    horizon_bucket_grid,
+    trace_key_space,
+)
+
+__all__ = [
+    "Finding",
+    "Report",
+    "ALL_RULES",
+    "AUDIT_RULES",
+    "LINT_RULES",
+    "horizon_bucket_grid",
+    "trace_key_space",
+    "compile_bound",
+    "format_trace_key_diff",
+]

@@ -1,0 +1,61 @@
+"""Recursive jaxpr equation walker used by the Pass A auditor.
+
+Walks every equation in a closed jaxpr, descending into sub-jaxprs held in
+equation params (scan/while/cond bodies, custom_vjp calls, ...).  Bodies
+of primitives named in ``OPAQUE_PRIMITIVES`` are *not* entered: a
+``pallas_call`` kernel body manipulates refs inside the kernel's own
+index space, so its loads/stores are not XLA gathers and are audited as a
+unit (the kernel is the gather-free read, by construction).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+from jax._src.core import ClosedJaxpr, Jaxpr, JaxprEqn
+
+# Kernel-body primitives whose inner jaxpr is not XLA dataflow.
+OPAQUE_PRIMITIVES = frozenset({"pallas_call"})
+
+
+def _sub_jaxprs(params: dict) -> Iterator[Jaxpr]:
+    for v in params.values():
+        if isinstance(v, (ClosedJaxpr, Jaxpr)):
+            yield v.jaxpr if isinstance(v, ClosedJaxpr) else v
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                if isinstance(item, (ClosedJaxpr, Jaxpr)):
+                    yield item.jaxpr if isinstance(item, ClosedJaxpr) else item
+
+
+def iter_eqns(jaxpr, *, skip=OPAQUE_PRIMITIVES) -> Iterator[JaxprEqn]:
+    """Yield every equation reachable from ``jaxpr``, outermost first."""
+    if isinstance(jaxpr, ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name in skip:
+            continue
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub, skip=skip)
+
+
+def eqns_by_name(jaxpr, name: str) -> list[JaxprEqn]:
+    """All equations (recursively) whose primitive is ``name``."""
+    return [e for e in iter_eqns(jaxpr) if e.primitive.name == name]
+
+
+def primitive_names(jaxpr) -> set[str]:
+    """The set of primitive names appearing anywhere in ``jaxpr``."""
+    return {e.primitive.name for e in iter_eqns(jaxpr)}
+
+
+def out_dtypes(jaxpr) -> set:
+    """Dtypes of every equation output in ``jaxpr`` (recursively)."""
+    dts = set()
+    for eqn in iter_eqns(jaxpr):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is not None:
+                dts.add(dt)
+    return dts

@@ -1,0 +1,425 @@
+"""Pass B: repo-wide AST lint for recompile/correctness hazards.
+
+The rules (ids, severities, fixtures) live in ``rules.py``; this module is
+the engine.  Per file it builds:
+
+* an import table (module-level imports and their use counts),
+* a *jit registry*: functions that are jitted — decorated with
+  ``jax.jit`` / ``functools.partial(jax.jit, ...)``, or referenced by a
+  ``jax.jit(fn, ...)`` / ``CountingJit(fn, ...)`` call — together with
+  their ``static_argnums/argnames`` and ``donate_argnums``,
+* per-function traced-parameter sets (params minus self/static),
+
+then walks every function body once, emitting findings keyed by rule id.
+The analysis is deliberately syntactic: it never imports the linted code,
+so it runs identically on fixtures, benchmarks and the live tree.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis.findings import Finding
+
+MUTABLE_CALLS = {"list", "dict", "set", "deque", "defaultdict", "Counter",
+                 "OrderedDict", "bytearray"}
+CAST_CALLS = {"int", "float", "bool", "complex"}
+ITEM_METHODS = {"item", "tolist", "__index__"}
+NUMPY_ALIASES = {"np", "numpy"}
+# numpy attributes that are pure metadata/constants — safe on traced values
+NUMPY_SAFE_ATTRS = {"shape", "ndim", "dtype", "float32", "float64", "int32",
+                    "int64", "bool_", "uint32", "pi", "inf", "nan", "newaxis",
+                    "intp", "issubdtype", "floating", "complexfloating",
+                    "integer", "number", "result_type", "promote_types"}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'self.pool.cache'-style dotted name for Name/Attribute chains."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class JitInfo:
+    fn_name: Optional[str]          # module-local callee name, if resolvable
+    static_argnums: tuple = ()
+    static_argnames: tuple = ()
+    donate_argnums: tuple = ()
+    lineno: int = 0
+
+
+def _const_tuple(node) -> tuple:
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, str)):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant))
+    return ()
+
+
+def _jit_call_info(call: ast.Call) -> Optional[JitInfo]:
+    """If ``call`` is jax.jit(...) / jit(...) / CountingJit(...) /
+    functools.partial(jax.jit, ...), extract the jit metadata."""
+    fname = dotted(call.func)
+    if fname in ("functools.partial", "partial") and call.args:
+        inner = dotted(call.args[0])
+        if inner in ("jax.jit", "jit"):
+            info = JitInfo(fn_name=None, lineno=call.lineno)
+            _fill_kwargs(info, call.keywords)
+            return info
+        return None
+    if fname not in ("jax.jit", "jit", "CountingJit", "engine.CountingJit"):
+        return None
+    info = JitInfo(fn_name=None, lineno=call.lineno)
+    if call.args:
+        target = dotted(call.args[0])
+        if target:
+            info.fn_name = target.split(".")[-1]  # methods bind by attr name
+    _fill_kwargs(info, call.keywords)
+    return info
+
+
+def _fill_kwargs(info: JitInfo, keywords) -> None:
+    for kw in keywords:
+        if kw.arg == "static_argnums":
+            info.static_argnums = _const_tuple(kw.value)
+        elif kw.arg == "static_argnames":
+            info.static_argnames = _const_tuple(kw.value)
+        elif kw.arg == "donate_argnums":
+            info.donate_argnums = _const_tuple(kw.value)
+
+
+class _FunctionIndex(ast.NodeVisitor):
+    """All function defs (any nesting) + which are jitted and how."""
+
+    def __init__(self):
+        self.defs: dict[str, ast.FunctionDef] = {}
+        self.jits: dict[str, JitInfo] = {}          # fn name -> jit info
+        self.jit_targets: dict[str, JitInfo] = {}   # bound name -> jit info
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.defs.setdefault(node.name, node)
+        for dec in node.decorator_list:
+            name = dotted(dec)
+            if name in ("jax.jit", "jit"):
+                self.jits[node.name] = JitInfo(fn_name=node.name,
+                                               lineno=node.lineno)
+            elif isinstance(dec, ast.Call):
+                info = _jit_call_info(dec)
+                if info is not None:
+                    info.fn_name = node.name
+                    self.jits[node.name] = info
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call) -> None:
+        info = _jit_call_info(node)
+        if info is not None and info.fn_name:
+            self.jits.setdefault(info.fn_name, info)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if isinstance(node.value, ast.Call):
+            info = _jit_call_info(node.value)
+            if info is not None:
+                for t in node.targets:
+                    name = dotted(t)
+                    if name:
+                        self.jit_targets[name] = info
+                if info.fn_name:
+                    self.jits.setdefault(info.fn_name, info)
+        self.generic_visit(node)
+
+
+def _traced_params(fn: ast.FunctionDef, info: JitInfo) -> set[str]:
+    args = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    offset = 1 if args and args[0] in ("self", "cls") else 0
+    traced = []
+    for i, name in enumerate(args[offset:]):
+        if i in info.static_argnums or name in info.static_argnames:
+            continue
+        traced.append(name)
+    return {n for n in traced if n not in ("self", "cls")}
+
+
+def _stmt_sequence(body: list[ast.stmt]):
+    """Statements of a function body in source order, descending into
+    compound statements (the donated-rebind scan needs linear order)."""
+    for stmt in body:
+        yield stmt
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, field, None)
+            if sub:
+                yield from _stmt_sequence(sub)
+        for handler in getattr(stmt, "handlers", []) or []:
+            yield from _stmt_sequence(handler.body)
+
+
+def _names_loaded(node: ast.AST) -> set[str]:
+    out = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Name, ast.Attribute)):
+            d = dotted(sub)
+            if d and isinstance(getattr(sub, "ctx", None), ast.Load):
+                out.add(d)
+    return out
+
+
+def _assign_targets(stmt: ast.stmt) -> set[str]:
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)) and stmt.target:
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    out = set()
+    for t in targets:
+        for el in ast.walk(t):
+            if isinstance(el, (ast.Name, ast.Attribute)):
+                d = dotted(el)
+                if d:
+                    out.add(d)
+    return out
+
+
+def _header_exprs(stmt: ast.stmt) -> list[ast.AST]:
+    """The expressions a compound statement evaluates *itself* — its body
+    statements are yielded (and checked) separately by _stmt_sequence, so
+    scanning the whole subtree here would double-count nested reads
+    against their own rebinds."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [i.context_expr for i in stmt.items]
+    if isinstance(stmt, ast.Try):
+        return []
+    return [stmt]
+
+
+class FileLinter:
+    def __init__(self, path: str, src: str):
+        self.path = path
+        self.tree = ast.parse(src)
+        self.findings: list[Finding] = []
+        self.index = _FunctionIndex()
+        self.index.visit(self.tree)
+
+    def _emit(self, rule: str, severity: str, lineno: int, msg: str) -> None:
+        self.findings.append(
+            Finding(rule, severity, f"{self.path}:{lineno}", msg)
+        )
+
+    # ------------------------------------------------------- module level --
+    def check_unused_imports(self) -> None:
+        if Path(self.path).name == "__init__.py":
+            return  # re-export surface: unused-at-module-scope is the point
+        imported: dict[str, int] = {}
+        for node in self.tree.body:
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    imported[name] = node.lineno
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    if a.asname == a.name:
+                        continue  # explicit re-export (PEP 484 idiom)
+                    imported[a.asname or a.name] = node.lineno
+        used: set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Name):
+                used.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                d = dotted(node)
+                if d:
+                    used.add(d.split(".")[0])
+            elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+                pass
+        # names quoted in __all__
+        for node in self.tree.body:
+            if (isinstance(node, ast.Assign)
+                    and any(dotted(t) == "__all__" for t in node.targets)):
+                for el in ast.walk(node.value):
+                    if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                        used.add(el.value)
+        for name, lineno in imported.items():
+            if name not in used:
+                self._emit("L-UNUSED-IMPORT", "warning", lineno,
+                           f"import '{name}' is never used")
+
+    # ----------------------------------------------------- function level --
+    def check_functions(self) -> None:
+        for fn in (n for n in ast.walk(self.tree)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))):
+            self._check_mutable_defaults(fn)
+            info = self.index.jits.get(fn.name)
+            if info is not None:
+                self._check_traced_body(fn, info)
+                self._check_static_hashability(fn, info)
+            self._check_donated_rebind(fn)
+
+    def _check_mutable_defaults(self, fn) -> None:
+        for default in list(fn.args.defaults) + [
+            d for d in fn.args.kw_defaults if d is not None
+        ]:
+            mutable = isinstance(default, (ast.List, ast.Dict, ast.Set,
+                                           ast.ListComp, ast.DictComp,
+                                           ast.SetComp))
+            if isinstance(default, ast.Call):
+                callee = dotted(default.func)
+                mutable = callee in MUTABLE_CALLS
+            if mutable:
+                self._emit("L-MUT-DEFAULT", "error", default.lineno,
+                           f"mutable default argument in '{fn.name}' is "
+                           "shared across calls (and hash-unstable if the "
+                           "function is ever jitted with it static)")
+
+    def _check_static_hashability(self, fn, info: JitInfo) -> None:
+        args = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        offset = 1 if args and args[0] in ("self", "cls") else 0
+        static = {args[offset + i] for i in info.static_argnums
+                  if isinstance(i, int) and offset + i < len(args)}
+        static |= set(info.static_argnames)
+        defaults = fn.args.defaults
+        defaulted = args[len(args) - len(defaults):]
+        for name, default in zip(defaulted, defaults):
+            if name not in static:
+                continue
+            unhashable = isinstance(default, (ast.List, ast.Dict, ast.Set))
+            if isinstance(default, ast.Call):
+                unhashable = dotted(default.func) in MUTABLE_CALLS
+            if unhashable:
+                self._emit("L-STATIC-UNHASHABLE", "error", default.lineno,
+                           f"static arg '{name}' of jitted '{fn.name}' has an "
+                           "unhashable default — every call raises (or, with "
+                           "a hashable-but-mutable value, silently retraces)")
+
+    def _check_traced_body(self, fn, info: JitInfo) -> None:
+        traced = _traced_params(fn, info)
+        if not traced:
+            return
+
+        def is_traced(node) -> bool:
+            return any(isinstance(sub, ast.Name) and sub.id in traced
+                       for sub in ast.walk(node))
+
+        def identity_test(node) -> bool:
+            # `x is None` / `x is not y` never concretizes a tracer
+            return (isinstance(node, ast.Compare)
+                    and all(isinstance(op, (ast.Is, ast.IsNot))
+                            for op in node.ops))
+
+        for node in ast.walk(fn):
+            if identity_test(getattr(node, "test", None)):
+                continue
+            if isinstance(node, (ast.If, ast.While)) and is_traced(node.test):
+                self._emit("L-TRACED-BRANCH", "error", node.lineno,
+                           f"python branch on traced value in jitted "
+                           f"'{fn.name}' — concretization error at trace "
+                           "time (use lax.cond/jnp.where)")
+            elif isinstance(node, ast.IfExp) and is_traced(node.test):
+                self._emit("L-TRACED-BRANCH", "error", node.lineno,
+                           f"conditional expression on traced value in "
+                           f"jitted '{fn.name}' (use jnp.where)")
+            elif isinstance(node, ast.Call):
+                callee = dotted(node.func)
+                if (callee in CAST_CALLS
+                        and any(is_traced(a) for a in node.args)):
+                    self._emit("L-TRACED-CAST", "error", node.lineno,
+                               f"{callee}() on traced value in jitted "
+                               f"'{fn.name}' — host sync / concretization "
+                               "at trace time")
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in ITEM_METHODS
+                      and is_traced(node.func.value)):
+                    self._emit("L-TRACED-CAST", "error", node.lineno,
+                               f".{node.func.attr}() on traced value in "
+                               f"jitted '{fn.name}' — host sync inside jit")
+                elif (callee and callee.split(".")[0] in NUMPY_ALIASES
+                      and callee.split(".")[-1] not in NUMPY_SAFE_ATTRS
+                      and any(is_traced(a) for a in node.args)):
+                    self._emit("L-NP-TRACED", "error", node.lineno,
+                               f"numpy call {callee}() on traced value in "
+                               f"jitted '{fn.name}' — silent host round-trip "
+                               "(use jnp)")
+
+    def _check_donated_rebind(self, fn) -> None:
+        stmts = list(_stmt_sequence(fn.body))
+        hazards: dict[str, int] = {}  # dotted name -> lineno of donating call
+        for stmt in stmts:
+            headers = _header_exprs(stmt)
+            # use-before-rebind of an already-donated buffer?
+            if hazards:
+                loaded = set()
+                for h in headers:
+                    loaded |= _names_loaded(h)
+                targets = _assign_targets(stmt)
+                for name in list(hazards):
+                    if name in loaded and name not in targets:
+                        self._emit(
+                            "L-DONATED-REBIND", "error", stmt.lineno,
+                            f"'{name}' was donated to a jitted call at line "
+                            f"{hazards[name]} and read again before being "
+                            "rebound — donated buffers are invalidated",
+                        )
+                        del hazards[name]
+            targets = _assign_targets(stmt)
+            for name in targets:
+                hazards.pop(name, None)
+            for call in (n for h in headers for n in ast.walk(h)
+                         if isinstance(n, ast.Call)):
+                callee = dotted(call.func)
+                info = (self.index.jit_targets.get(callee)
+                        if callee else None)
+                if info is None or not info.donate_argnums:
+                    continue
+                for i in info.donate_argnums:
+                    if not isinstance(i, int) or i >= len(call.args):
+                        continue
+                    name = dotted(call.args[i])
+                    if name and name not in targets:
+                        hazards[name] = stmt.lineno
+
+    def run(self) -> list[Finding]:
+        self.check_unused_imports()
+        self.check_functions()
+        return self.findings
+
+
+def lint_source(src: str, path: str = "<string>") -> list[Finding]:
+    return FileLinter(path, src).run()
+
+
+def lint_paths(paths: list[str], root: str = ".") -> tuple[list[Finding], int]:
+    """Lint every .py file under ``paths`` (files or directories, relative
+    to ``root``).  Returns (findings, files_linted)."""
+    rootp = Path(root)
+    files: list[Path] = []
+    for p in paths:
+        pp = rootp / p
+        if pp.is_dir():
+            files.extend(sorted(pp.rglob("*.py")))
+        elif pp.suffix == ".py":
+            files.append(pp)
+    findings: list[Finding] = []
+    for f in files:
+        rel = str(f.relative_to(rootp)) if f.is_relative_to(rootp) else str(f)
+        findings.extend(lint_source(f.read_text(), rel))
+    return findings, len(files)

@@ -1,0 +1,215 @@
+"""The rule registry: every auditor/lint rule with id, severity, summary,
+and a known-bad fixture it must flag plus a known-good twin it must pass.
+
+``--self-check`` runs each lint fixture through the real lint engine and
+each audit fixture through the real audit checks (see ``fixtures.py``),
+so a refactor that silently blinds a rule fails CI the same way a real
+violation would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    pass_name: str        # 'audit' | 'lint'
+    severity: str         # 'error' | 'warning'
+    summary: str
+    bad_fixture: Optional[str] = None   # lint: source that must flag
+    good_fixture: Optional[str] = None  # lint: twin that must pass
+
+
+LINT_RULES: dict[str, Rule] = {}
+AUDIT_RULES: dict[str, Rule] = {}
+
+
+def _lint(rule: Rule) -> Rule:
+    LINT_RULES[rule.id] = rule
+    return rule
+
+
+def _audit(rule: Rule) -> Rule:
+    AUDIT_RULES[rule.id] = rule
+    return rule
+
+
+# ------------------------------------------------------------ Pass A ------
+_audit(Rule(
+    "A-GATHER", "audit", "error",
+    "paged tick jaxpr materializes the block stream with an arena gather "
+    "beyond the read path's budget (streamed dense: 1, streamed MLA: 0, "
+    "pallas: 0, gathered oracle: 2)",
+))
+_audit(Rule(
+    "A-DONATE", "audit", "error",
+    "a donate_argnums buffer produces no input-output aliasing in the "
+    "lowered/compiled program — donation silently dropped, the tick "
+    "copies the cache instead of updating in place",
+))
+_audit(Rule(
+    "A-F64", "audit", "error",
+    "float64/complex128 value inside a jitted serving entry point "
+    "(unintended upcast; ticks compute in the model dtype + f32)",
+))
+_audit(Rule(
+    "A-TRANSFER", "audit", "error",
+    "host transfer or callback primitive inside a tick body",
+))
+_audit(Rule(
+    "A-TRACEKEY", "audit", "error",
+    "the engine traced a (step kind, horizon bucket) key outside the "
+    "statically enumerated space, or CountingJit totals disagree with "
+    "the derived per-kind bound",
+))
+
+
+# ------------------------------------------------------------ Pass B ------
+_lint(Rule(
+    "L-TRACED-BRANCH", "lint", "error",
+    "python if/while on a traced value inside a jitted function",
+    bad_fixture="""\
+import jax
+
+@jax.jit
+def tick(x, active):
+    if active:
+        return x + 1
+    return x
+""",
+    good_fixture="""\
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def tick(x, active):
+    return jnp.where(active, x + 1, x)
+""",
+))
+_lint(Rule(
+    "L-TRACED-CAST", "lint", "error",
+    "int()/float()/.item() on a traced value inside a jitted function "
+    "(host sync / concretization error)",
+    bad_fixture="""\
+import jax
+
+@jax.jit
+def tick(x, pos):
+    return x[int(pos)]
+""",
+    good_fixture="""\
+import jax
+
+@jax.jit
+def tick(x, pos):
+    return jax.lax.dynamic_index_in_dim(x, pos, keepdims=False)
+""",
+))
+_lint(Rule(
+    "L-NP-TRACED", "lint", "error",
+    "numpy (not jnp) call on a traced value inside a jitted function — "
+    "silent host round-trip, breaks under transfer guard",
+    bad_fixture="""\
+import jax
+import numpy as np
+
+@jax.jit
+def tick(x):
+    return np.sum(x)
+""",
+    good_fixture="""\
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+@jax.jit
+def tick(x):
+    return jnp.sum(x) * np.float32(2.0)
+""",
+))
+_lint(Rule(
+    "L-STATIC-UNHASHABLE", "lint", "error",
+    "a static_argnums/argnames arg of a jitted function has an unhashable "
+    "default (every call raises — or silently retraces)",
+    bad_fixture="""\
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def reduce_over(x, dims=[0, 1]):
+    return x.sum(dims)
+""",
+    good_fixture="""\
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def reduce_over(x, dims=(0, 1)):
+    return x.sum(dims)
+""",
+))
+_lint(Rule(
+    "L-MUT-DEFAULT", "lint", "error",
+    "mutable default argument (shared across calls)",
+    bad_fixture="""\
+def admit(req, queue=[]):
+    queue.append(req)
+    return queue
+""",
+    good_fixture="""\
+def admit(req, queue=None):
+    queue = [] if queue is None else queue
+    queue.append(req)
+    return queue
+""",
+))
+_lint(Rule(
+    "L-DONATED-REBIND", "lint", "error",
+    "a buffer passed through donate_argnums is read again before being "
+    "rebound — donated buffers are invalidated by the call",
+    bad_fixture="""\
+import jax
+
+def _tick(cache, x):
+    return cache + x, x.sum()
+
+step = jax.jit(_tick, donate_argnums=(0,))
+
+def run(cache, x):
+    out, s = step(cache, x)
+    return cache.sum() + s
+""",
+    good_fixture="""\
+import jax
+
+def _tick(cache, x):
+    return cache + x, x.sum()
+
+step = jax.jit(_tick, donate_argnums=(0,))
+
+def run(cache, x):
+    cache, s = step(cache, x)
+    return cache.sum() + s
+""",
+))
+_lint(Rule(
+    "L-UNUSED-IMPORT", "lint", "warning",
+    "module-level import never used (outside __init__.py re-exports)",
+    bad_fixture="""\
+import os
+import sys
+
+def main():
+    return sys.argv
+""",
+    good_fixture="""\
+import sys
+
+def main():
+    return sys.argv
+""",
+))
+
+ALL_RULES: dict[str, Rule] = {**AUDIT_RULES, **LINT_RULES}

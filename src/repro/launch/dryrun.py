@@ -21,7 +21,6 @@ Usage:
   python -m repro.launch.dryrun --all [--multi-pod both|single|multi]
 """
 import argparse
-import dataclasses
 import functools
 import json
 import time
@@ -42,7 +41,7 @@ from repro.models.transformer import make_model
 from repro.parallel.sharding import SP_OVERRIDES, current_ctx, use_sharding
 from repro.roofline.analysis import analyze, model_flops_for
 from repro.train.loop import make_train_step
-from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.optimizer import OptimizerConfig
 
 
 def _sds_with_sharding(struct_tree, axes_tree):

@@ -21,18 +21,16 @@ import argparse
 import json
 import os
 import statistics
-import sys
 import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import store
 from repro.configs.registry import get_config, reduce_config
 from repro.data.synthetic import DataConfig, batch_at
 from repro.models.transformer import make_model
-from repro.parallel.sharding import param_sharding_tree, use_sharding
+from repro.parallel.sharding import use_sharding
 from repro.train.loop import make_train_step
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 

@@ -28,7 +28,7 @@ dispatcher in models/attention.py handles GQA broadcast and layout.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

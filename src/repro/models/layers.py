@@ -8,7 +8,6 @@ materialize ShapeDtypeStructs with NamedShardings without allocating.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,6 @@ scanned programs they agree with the *unrolled* oracle (tests/test_roofline_cost
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Optional
 

@@ -79,6 +79,13 @@ class CountingJit:
 
     def __init__(self, fn, **jit_kwargs):
         self._count = 0
+        self._fn = fn
+        self._jit_kwargs = dict(jit_kwargs)
+        # repro.analysis hook: when set (to a dict), every distinct call
+        # signature records one ShapeDtypeStruct tree of its args, so the
+        # auditor can re-trace the exact entry points a workload exercised
+        # without holding (donated!) buffer references.
+        self.capture_avals = None
 
         @functools.wraps(fn)
         def counted(*args, **kwargs):
@@ -88,11 +95,33 @@ class CountingJit:
         self._jitted = jax.jit(counted, **jit_kwargs)
 
     def __call__(self, *args, **kwargs):
+        if self.capture_avals is not None and not kwargs:
+            avals = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype
+                                               if not hasattr(x, "dtype") else x.dtype),
+                args,
+            )
+            key = tuple(
+                (leaf.shape, str(leaf.dtype)) for leaf in jax.tree.leaves(avals)
+            )
+            self.capture_avals.setdefault(key, avals)
         return self._jitted(*args, **kwargs)
 
     @property
     def compilations(self) -> int:
         return self._count
+
+    @property
+    def jitted(self):
+        """The underlying ``jax.jit`` object (AOT trace/lower access)."""
+        return self._jitted
+
+    @property
+    def donate_argnums(self) -> tuple:
+        return tuple(self._jit_kwargs.get("donate_argnums", ()))
+
+    def trace(self, *args, **kwargs):
+        return self._jitted.trace(*args, **kwargs)
 
 
 def round_slots_to_devices(num_slots: int, devices: int) -> int:
@@ -473,6 +502,12 @@ class ContinuousEngine:
         # the bucket sets each step kind has been traced at (the exact
         # compile-count bound), and the summed attended-token width
         self.horizon_log: list[tuple[int, int]] = []  # (horizon, bucket)/tick
+        # ticks dispatched under transfer_guard_host_to_device("disallow")
+        # — the serve test helpers assert this equals the tick count,
+        # proving no tick ran with an implicit host->device transfer.
+        # Host->device only: under a device mesh, jit legitimately
+        # reshards args device-to-device at dispatch.
+        self._guarded_ticks = 0
         self._buckets_seen: dict[str, set] = {"fused": set(), "decode": set()}
         self._attended_tokens = 0  # sum over ticks of bucket * block_size
         self._device_admits = np.zeros(self.num_devices, np.int64)
@@ -1053,23 +1088,36 @@ class ContinuousEngine:
                 chunk_toks[s] = st.padded[st.written : st.written + self.chunk]
                 n_valid[s] = takes[s]
                 is_pref[s] = True
-            nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
-                self._fused(
-                    self.params, self.pool.cache, self._last_logits, chunk_toks,
-                    self._pos_dev, n_valid, is_pref, self._active_dev,
-                    self._temps_dev, self._key, *paged_args,
+            # Explicit uploads: every tick operand is a committed device
+            # array before dispatch, so the transfer guard below can
+            # disallow *implicit* host->device transfers — an accidental
+            # numpy arg (a silent per-tick upload) fails loudly instead of
+            # slowly.  ``repro.analysis`` audits the same invariant
+            # statically (A-TRANSFER).
+            chunk_dev = self._put(jnp.asarray(chunk_toks), self._sh_row)
+            nv_dev = self._put(jnp.asarray(n_valid), self._sh_slot)
+            pref_dev = self._put(jnp.asarray(is_pref), self._sh_slot)
+            with jax.transfer_guard_host_to_device("disallow"):
+                self._guarded_ticks += 1
+                nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
+                    self._fused(
+                        self.params, self.pool.cache, self._last_logits, chunk_dev,
+                        self._pos_dev, nv_dev, pref_dev, self._active_dev,
+                        self._temps_dev, self._key, *paged_args,
+                    )
                 )
-            )
             self._fused_ticks += 1
         else:  # steady state: every live slot decodes -> the (N, 1) step
-            nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
-                self._decode(
-                    self.params, self.pool.cache, self._last_logits,
-                    self._pos_dev, self._active_dev, self._temps_dev, self._key,
-                    *paged_args,
+            with jax.transfer_guard_host_to_device("disallow"):
+                self._guarded_ticks += 1
+                nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
+                    self._decode(
+                        self.params, self.pool.cache, self._last_logits,
+                        self._pos_dev, self._active_dev, self._temps_dev, self._key,
+                        *paged_args,
+                    )
                 )
-            )
-        toks = np.asarray(nxt)
+        toks = jax.device_get(nxt)
         self.pool.advance({s: takes.get(s, 1) for s in live})
         self._active_steps += len(live)
         self._prefill_lane_steps += len(prefills)
@@ -1168,6 +1216,7 @@ class ContinuousEngine:
             ),
             "kv_paged": self.paged,
             "kv_hbm_bytes": self.pool.hbm_bytes(),
+            "transfer_guarded_ticks": self._guarded_ticks,
             # SLA control plane: policy knobs + the preemption/shedding
             # counters the sla bench scenario reports per configuration
             "sched": self.sched_policy,

@@ -45,6 +45,41 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# --- jitted pool kernels -----------------------------------------------
+# Module-level (not closures) so ``repro.analysis`` can audit their traced
+# programs (donation aliasing, dtype discipline) against the exact
+# functions the pools jit.
+
+def fork_block(cache, src, dst):
+    """Device-side COW block copy across every paged arena leaf.  All
+    ``layers`` leaves are ``(L, num_blocks, block_size, ...)`` — the block
+    axis is axis 1 for dense KV and MLA latents alike — so one jitted
+    dynamic slice/update with traced indices covers every family with a
+    single compilation."""
+    def cp(leaf):
+        blk = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, blk, dst, axis=1)
+    out = dict(cache)
+    out["layers"] = jax.tree.map(cp, cache["layers"])
+    return out
+
+
+def spill_gather(layers, ix):
+    """Preemption spill: gather a padded block chain out of the arenas."""
+    return jax.tree.map(lambda l: jnp.take(l, ix, axis=1), layers)
+
+
+def spill_scatter(cache, host, ix):
+    """Preemption restore: scatter a spilled payload into a fresh chain.
+    Duplicate trailing lanes carry identical values (index and data), so
+    the scatter is deterministic under any ordering."""
+    out = dict(cache)
+    out["layers"] = jax.tree.map(
+        lambda l, h: l.at[:, ix].set(h), cache["layers"], host
+    )
+    return out
+
+
 def shard_cache_tree(cache, mesh, axes_tree):
     """Place a cache tree on the serving mesh: every leaf gets the
     ``NamedSharding`` its logical axes imply under the default rules
@@ -219,7 +254,14 @@ class SlotKVPool(_SlotRanges):
             raise ValueError(f"slot {slot} is not allocated")
         if position > self.max_seq:
             raise ValueError(f"position {position} exceeds max_seq {self.max_seq}")
-        self.cache = self._insert(self.cache, request_cache, slot)
+        # explicit uploads: the request cache may be a host tree (slab
+        # spill-restore passes numpy mirrors) and the slot index a python
+        # int — commit both so the jit call itself never transfers
+        self.cache = self._insert(
+            self.cache,
+            jax.tree.map(jnp.asarray, request_cache),
+            jnp.asarray(slot, jnp.int32),
+        )
         self.positions[slot] = position
 
     def extract(self, slot: int):
@@ -630,15 +672,10 @@ class BlockPagedKVPool(_SlotRanges):
         jitted dynamic slice/update with traced indices covers every family
         with a single compilation."""
         if self._fork_jit is None:
-            def fork(cache, s, d):
-                def cp(leaf):
-                    blk = jax.lax.dynamic_slice_in_dim(leaf, s, 1, axis=1)
-                    return jax.lax.dynamic_update_slice_in_dim(leaf, blk, d, axis=1)
-                out = dict(cache)
-                out["layers"] = jax.tree.map(cp, cache["layers"])
-                return out
-            self._fork_jit = jax.jit(fork, donate_argnums=(0,))
-        self.cache = self._fork_jit(self.cache, np.int32(src), np.int32(dst))
+            self._fork_jit = jax.jit(fork_block, donate_argnums=(0,))
+        self.cache = self._fork_jit(
+            self.cache, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
+        )
 
     def write_barrier(self, slot: int, position: int) -> None:
         """COW safety assertion: the block ``slot``'s next write lands in
@@ -681,9 +718,7 @@ class BlockPagedKVPool(_SlotRanges):
         npad = self._spill_pad(len(chain))
         idx = np.asarray(chain + [chain[-1]] * (npad - len(chain)), np.int32)
         if self._spill_gather_jit is None:
-            def gather(layers, ix):
-                return jax.tree.map(lambda l: jnp.take(l, ix, axis=1), layers)
-            self._spill_gather_jit = jax.jit(gather)
+            self._spill_gather_jit = jax.jit(spill_gather)
         out = self._spill_gather_jit(self.cache["layers"], jnp.asarray(idx))
         return {"len": len(chain), "layers": jax.tree.map(np.asarray, out)}
 
@@ -708,13 +743,7 @@ class BlockPagedKVPool(_SlotRanges):
         npad = self._spill_pad(n)
         idx = np.asarray(chain[:n] + [chain[n - 1]] * (npad - n), np.int32)
         if self._spill_scatter_jit is None:
-            def scatter(cache, host, ix):
-                out = dict(cache)
-                out["layers"] = jax.tree.map(
-                    lambda l, h: l.at[:, ix].set(h), cache["layers"], host
-                )
-                return out
-            self._spill_scatter_jit = jax.jit(scatter, donate_argnums=(0,))
+            self._spill_scatter_jit = jax.jit(spill_scatter, donate_argnums=(0,))
         self.cache = self._spill_scatter_jit(
             self.cache,
             jax.tree.map(jnp.asarray, payload["layers"]),
@@ -732,7 +761,11 @@ class BlockPagedKVPool(_SlotRanges):
             raise ValueError(f"position {position} exceeds max_seq {self.max_seq}")
         extras = {k: v for k, v in request_cache.items() if k != "layers"}
         if extras:
-            self.cache = self._insert(self.cache, extras, slot)
+            self.cache = self._insert(
+                self.cache,
+                jax.tree.map(jnp.asarray, extras),
+                jnp.asarray(slot, jnp.int32),
+            )
         self.positions[slot] = position
         if position:
             self.ensure(slot, position)

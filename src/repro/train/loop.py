@@ -4,9 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.transformer import Model
-from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from repro.train.optimizer import OptimizerConfig, adamw_update
 
 
 def make_train_step(model: Model, opt_cfg: OptimizerConfig, microbatches: int = 1):

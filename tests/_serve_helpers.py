@@ -1,29 +1,64 @@
 """Shared assertions for the serving test modules.
 
-The compile-counter contract changed shape in the horizon-bucketing PR:
-slab engines still compile each step at most once, but paged engines now
-re-trace once per (step kind, horizon bucket actually seen) — the traced
-block-table argument is sliced to the tick's bucketed block horizon, so a
-new bucket is a new tick shape.  The counters stay *exact* (CountingJit),
-just bounded by the bucket grid instead of pinned to 1; this helper is the
-single place that bound is written down.
+The compile-counter contract: slab engines compile each step kind at most
+once; paged engines re-trace once per (step kind, horizon bucket actually
+seen) — the traced block-table argument is sliced to the tick's bucketed
+block horizon, so a new bucket is a new tick shape.  The counters stay
+*exact* (CountingJit), bounded by the statically enumerated trace-key
+space.  That space lives in ``repro.analysis.tracekeys`` — the same
+single source of truth the Pass A ``A-TRACEKEY`` audit checks — so a
+drift between the engine, the tests, and the auditor is impossible by
+construction.
 """
+from repro.analysis import tracekeys
 
 
 def assert_exact_compile_counters(m: dict) -> None:
-    assert m["prefill_compilations"] == 0
-    if m.get("kv_paged"):
-        grid = m["horizon_bucket_grid"]
+    """Pin compile counters to the derived trace-key space, exactly.
+
+    On failure the assert message carries a readable expected-vs-seen
+    trace-key table (``format_trace_key_diff``), not just two ints.
+    """
+    paged = bool(m.get("kv_paged"))
+    grid = m.get("horizon_bucket_grid") if paged else None
+    expected = tracekeys.trace_key_space(paged=paged, grid=grid)
+    seen = tracekeys.seen_trace_keys(m)
+    counts = {
+        "fused": m["fused_step_compilations"],
+        "decode": m["decode_compilations"],
+        "prefill": m["prefill_compilations"],
+    }
+    diff = tracekeys.format_trace_key_diff(expected, seen, counts)
+
+    assert m["prefill_compilations"] == 0, diff
+    assert seen <= expected, diff
+    if paged:
         # exactly one trace per (step kind, bucket seen), never more than
         # the grid allows
-        assert m["fused_step_compilations"] == len(m["fused_buckets"])
-        assert m["decode_compilations"] == len(m["decode_buckets"])
-        assert len(m["fused_buckets"]) <= len(grid)
-        assert len(m["decode_buckets"]) <= len(grid)
-        assert set(m["horizon_buckets"]) <= set(grid)
+        bound = tracekeys.compile_bound(paged=True, grid=grid)
+        assert m["fused_step_compilations"] == len(m["fused_buckets"]), diff
+        assert m["decode_compilations"] == len(m["decode_buckets"]), diff
+        assert m["fused_step_compilations"] <= bound["fused"], diff
+        assert m["decode_compilations"] <= bound["decode"], diff
         assert m["horizon_buckets"] == sorted(
             set(m["fused_buckets"]) | set(m["decode_buckets"])
-        )
+        ), diff
     else:
-        assert m["fused_step_compilations"] == (1 if m["fused_ticks"] else 0)
-        assert m["decode_compilations"] in (0, 1)
+        assert m["fused_step_compilations"] == (1 if m["fused_ticks"] else 0), diff
+        assert m["decode_compilations"] in (0, 1), diff
+    assert_transfer_guarded(m)
+
+
+def assert_transfer_guarded(m: dict) -> None:
+    """Every engine step dispatched its tick under
+    ``transfer_guard_host_to_device('disallow')``.
+
+    ``transfer_guarded_ticks`` increments once per guarded jitted-tick
+    dispatch and ``decode_steps`` once per engine step, so equality means
+    no step slipped past the guard.
+    """
+    assert m["transfer_guarded_ticks"] == m["decode_steps"], (
+        f"transfer_guarded_ticks={m['transfer_guarded_ticks']} != "
+        f"decode_steps={m['decode_steps']}: some tick dispatched outside "
+        "transfer_guard_host_to_device('disallow')"
+    )
