@@ -14,7 +14,7 @@ schema (written to experiments/results/) so future PRs can track the
 serving-throughput trajectory:
 
   {"benchmark": "serve", "arch": ..., "workload": {... incl. "arch",
-                "num_devices", "read_path"},
+                "num_devices", "read_path", "kv_dtype"},
    "static": {"wall_s", "cold_wall_s", "tokens_per_s", "batches"},
    "continuous": {"wall_s", "cold_wall_s", "tokens_per_s", "decode_steps",
                   "fused_ticks", "mean_slot_utilization",
@@ -30,10 +30,12 @@ serving-throughput trajectory:
           + paged: "num_blocks", "block_size", "slab_slots_at_equal_hbm",
           "equal_hbm_slots_gain"},
    "speedup": ..., "cold_speedup": ..., "greedy_token_identical": ...,
+   "kv_dtype": ..., "greedy_lcp_min": ..., "greedy_lcp_mean": ...,
    "history": [{"git_sha", "arch", "workload_hash", "timestamp", "speedup",
                 "cold_speedup", "tokens_per_s", "prefill_compilations",
                 "decode_compilations", "fused_step_compilations",
-                "kv_hbm_bytes", "read_path", "num_devices",
+                "kv_hbm_bytes", "read_path", "kv_dtype", "greedy_lcp_min",
+                "greedy_lcp_mean", "num_devices",
                 "per_device_slots", "shard_balance", "num_blocks",
                 "block_utilization", "equal_hbm_slots_gain",
                 "horizon_buckets", "mean_attended_tokens_per_tick"}, ...]}
@@ -41,7 +43,11 @@ serving-throughput trajectory:
 ``read_path`` (gathered / streamed / pallas / slab) is part of the workload
 identity: the gather-free streamed read and the PR 3 gathered read are
 different perf trajectories, so runs on different paths must not share a
-``workload_hash``.  ``horizon_buckets`` and
+``workload_hash``.  ``kv_dtype`` (fp / int8) likewise: the int8 pool halves
+the arena and roughly doubles ``equal_hbm_slots_gain``, a different
+trajectory from fp runs (rows predating the field read back as "fp"); the
+quantized run is tolerance-pinned against the fp oracle via its greedy
+longest-common-prefix fractions (``greedy_lcp_min``/``greedy_lcp_mean``).  ``horizon_buckets`` and
 ``mean_attended_tokens_per_tick`` track horizon bucketing — compile counts
 pinned to one trace per (step kind, bucket), attended width scaling with
 live context instead of max_seq.
@@ -132,17 +138,19 @@ def _load_history() -> list:
 
 
 def _upsert_history(history: list, row: dict) -> list:
-    """Dedupe history on (git_sha, workload_hash, arch, read_path): a re-run
-    of the same workload at the same commit overwrites its old row *in
-    place* (position preserved — the trajectory stays chronological by first
-    appearance) instead of appending a duplicate.  Different SHAs, archs,
-    workloads or read paths never collide, so genuine trajectory points are
-    all kept."""
-    key = (row.get("git_sha"), row.get("workload_hash"),
-           row.get("arch"), row.get("read_path"))
+    """Dedupe history on (git_sha, workload_hash, arch, read_path, kv_dtype):
+    a re-run of the same workload at the same commit overwrites its old row
+    *in place* (position preserved — the trajectory stays chronological by
+    first appearance) instead of appending a duplicate.  Different SHAs,
+    archs, workloads, read paths or KV dtypes never collide, so genuine
+    trajectory points are all kept.  Rows predating the quantized pool have
+    no ``kv_dtype`` field and default to "fp" (what they measured)."""
+    def _key(r):
+        return (r.get("git_sha"), r.get("workload_hash"), r.get("arch"),
+                r.get("read_path"), r.get("kv_dtype", "fp"))
+
     for i, old in enumerate(history):
-        if (old.get("git_sha"), old.get("workload_hash"),
-                old.get("arch"), old.get("read_path")) == key:
+        if _key(old) == _key(row):
             history[i] = row
             return history
     history.append(row)
@@ -152,10 +160,10 @@ def _upsert_history(history: list, row: dict) -> list:
 def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
         max_new: int = 16, num_slots: int = 0, stagger: int = 1,
         chunk: int = 8, reps: int = 10, tail_len: int = -1,
-        devices: int = 1, force_read: str = "") -> dict:
+        devices: int = 1, force_read: str = "", kv_dtype: str = "fp") -> dict:
     if not force_read:
         return _run(arch, n_requests, base_len, max_new, num_slots, stagger,
-                    chunk, reps, tail_len, devices)
+                    chunk, reps, tail_len, devices, kv_dtype)
     # pin the paged read path (e.g. --force-read gathered to re-measure the
     # PR 3 full-stream baseline on the same host as a streamed run;
     # read_path is folded into workload_hash so the trajectories stay
@@ -166,13 +174,29 @@ def run(arch: str = "internlm2-1.8b", n_requests: int = 12, base_len: int = 16,
     attention_mod.FORCE_PAGED_READ = force_read
     try:
         return _run(arch, n_requests, base_len, max_new, num_slots, stagger,
-                    chunk, reps, tail_len, devices)
+                    chunk, reps, tail_len, devices, kv_dtype)
     finally:
         attention_mod.FORCE_PAGED_READ = None
 
 
+def _greedy_lcp_fractions(comps, ref) -> list:
+    """Per-request longest-common-prefix fraction of each continuous greedy
+    stream against the fp static oracle (the int8 tolerance metric)."""
+    fracs = []
+    for c in comps:
+        want = np.asarray(ref[c.request_id])
+        got = np.asarray(c.tokens)
+        lcp = 0
+        for a, b in zip(want, got):
+            if a != b:
+                break
+            lcp += 1
+        fracs.append(lcp / max(1, len(want)))
+    return fracs
+
+
 def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
-         chunk, reps, tail_len, devices) -> dict:
+         chunk, reps, tail_len, devices, kv_dtype="fp") -> dict:
     cfg = reduce_config(get_config(arch))
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -209,7 +233,7 @@ def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
     t0 = time.time()
     engine = ContinuousEngine(model, params, num_slots=num_slots,
                               max_seq=max_seq, cfg=scfg, chunk=chunk,
-                              devices=devices)
+                              devices=devices, kv_dtype=kv_dtype)
     engine.run(reqs)
     cold_cont_s = time.time() - t0
 
@@ -228,7 +252,8 @@ def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
         tight_blocks = int(engine.pool.peak_reserved_per_device.max()) * devices
         engine = ContinuousEngine(model, params, num_slots=num_slots,
                                   max_seq=max_seq, cfg=scfg, chunk=chunk,
-                                  num_blocks=tight_blocks, devices=devices)
+                                  num_blocks=tight_blocks, devices=devices,
+                                  kv_dtype=kv_dtype)
         engine.run(reqs)  # warm the tight engine (and prove it serves)
         paged_hbm = engine.pool.hbm_bytes()
         slab_slots = paged_hbm // per_slot_slab_bytes
@@ -262,6 +287,17 @@ def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
     m = engine.metrics()
 
     identical = all(np.array_equal(c.tokens, ref[c.request_id]) for c in comps)
+    lcp = _greedy_lcp_fractions(comps, ref)
+    if kv_dtype != "fp":
+        # the quantized engine is compared against the SAME fp oracle:
+        # greedy streams may diverge late (score noise), but the
+        # longest-common-prefix fractions are pinned — the same tolerance
+        # discipline tests/test_serve_quant.py enforces per family
+        assert min(lcp) >= 0.5 and float(np.mean(lcp)) >= 0.7, \
+            f"kv_dtype={kv_dtype}: greedy outputs drifted from the fp " \
+            f"oracle beyond the pinned tolerance (lcp fractions {lcp})"
+    else:
+        assert identical, "fp continuous output diverged from the oracle"
     workload = {
         # arch is part of the workload identity: without it, runs with
         # different --arch hashed alike and polluted one history trajectory
@@ -281,6 +317,9 @@ def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
         # likewise the read path: gathered vs streamed vs pallas (vs slab)
         # are different perf trajectories and must not share a hash
         "read_path": m["read_path"],
+        # and the KV arena dtype: int8 halves the pool and shifts the
+        # equal-HBM trajectory — it must never share a hash with fp runs
+        "kv_dtype": kv_dtype,
     }
     payload = {
         "benchmark": "serve",
@@ -325,6 +364,9 @@ def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
         "speedup": static_s / cont_s,
         "cold_speedup": cold_static_s / cold_cont_s,
         "greedy_token_identical": identical,
+        "kv_dtype": kv_dtype,
+        "greedy_lcp_min": float(min(lcp)),
+        "greedy_lcp_mean": float(np.mean(lcp)),
     }
     history = _load_history()
     _upsert_history(history, {
@@ -341,6 +383,9 @@ def _run(arch, n_requests, base_len, max_new, num_slots, stagger,
         "fused_step_compilations": m["fused_step_compilations"],
         "kv_hbm_bytes": m["kv_hbm_bytes"],
         "read_path": m["read_path"],
+        "kv_dtype": kv_dtype,
+        "greedy_lcp_min": float(min(lcp)),
+        "greedy_lcp_mean": float(np.mean(lcp)),
         "num_devices": m["num_devices"],
         "per_device_slots": m["per_device_slots"],
         "shard_balance": m["shard_balance"],
@@ -748,6 +793,10 @@ def main():
                     choices=["", "gathered", "streamed", "pallas"],
                     help="pin the paged read path (same-host baseline "
                          "comparisons; hashed into the workload identity)")
+    ap.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"],
+                    help="paged KV arena dtype (int8: per-block scales, "
+                         "per-tile dequant after the block-table read; "
+                         "hashed into the workload identity)")
     # shared-prefix scenario shape (ignored for --scenario default)
     ap.add_argument("--users", type=int, default=16)
     ap.add_argument("--personas", type=int, default=4)
@@ -824,7 +873,8 @@ def main():
         return
     payload = run(args.arch, args.requests, args.base_len, args.new_tokens,
                   args.num_slots, chunk=args.chunk, tail_len=args.tail_len,
-                  devices=args.devices, force_read=args.force_read)
+                  devices=args.devices, force_read=args.force_read,
+                  kv_dtype=args.kv_dtype)
     print(json.dumps({k: v for k, v in payload.items() if k != "history"},
                      indent=2, default=float))
     s, c = payload["static"], payload["continuous"]
@@ -845,6 +895,10 @@ def main():
               f"slots, admission balance {c['shard_balance']:.2f} "
               "(1.0 = perfectly even)")
     kv = payload["kv"]
+    if payload["kv_dtype"] != "fp":
+        print(f"quantized KV: kv_dtype={payload['kv_dtype']}  greedy LCP vs "
+              f"fp oracle min {payload['greedy_lcp_min']:.2f} / mean "
+              f"{payload['greedy_lcp_mean']:.2f} (pinned >= 0.5 / 0.7)")
     if kv["paged"]:
         print(f"paged KV: {c['num_blocks']} blocks x {c['block_size']} tok "
               f"= {kv['kv_hbm_bytes']/1024:.1f} KiB resident "

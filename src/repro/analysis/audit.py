@@ -26,6 +26,13 @@ invariants:
   actually traced, and the CountingJit totals equal the per-kind seen
   counts, bounded by the derived grid — the same single-source bound
   ``tests/_serve_helpers.assert_exact_compile_counters`` asserts.
+* **A-QUANT** — quantized-mode (kv_dtype=int8) programs never hold a
+  floating-typed value at a full KV arena shape: the int8 arena is the
+  only arena, dequant happens strictly per gathered tile (after the
+  block-table read), and in particular no upcast-then-gather — a float
+  gather operand at arena shape means the whole fp stream was
+  materialized before the table was consulted, which is exactly the
+  HBM-doubling rewrite the quantized path exists to avoid.
 """
 from __future__ import annotations
 
@@ -87,6 +94,7 @@ class EntryPoint:
     gather_budget: Optional[int] = None  # None: skip the gather audit
     bucket: Optional[int] = None       # horizon bucket of this signature
     compile_donation: bool = False     # verify aliasing in the executable
+    quantized: bool = False            # run the A-QUANT no-fp-arena check
 
 
 def read_path_for(cfg) -> str:
@@ -97,7 +105,7 @@ def read_path_for(cfg) -> str:
 
 
 def build_engine(arch: str, *, num_slots: int = 2, chunk: int = 4,
-                 block_size: int = 4):
+                 block_size: int = 4, kv_dtype: str = "fp"):
     """Smoke-scale engine + its workload for one registry arch."""
     cfg = reduce_config(get_config(arch))
     model = make_model(cfg)
@@ -108,6 +116,7 @@ def build_engine(arch: str, *, num_slots: int = 2, chunk: int = 4,
               cfg=ServeConfig(), chunk=chunk)
     if model.supports_paging:
         kw["block_size"] = block_size
+        kw["kv_dtype"] = kv_dtype
     engine = ContinuousEngine(model, params, **kw)
     return engine, reqs
 
@@ -206,6 +215,8 @@ def _arena_block_elems(shape, layer_leaf_shapes) -> Optional[int]:
     """If ``shape`` is a paged arena leaf (possibly layer-stripped or
     block-flattened), return the element count of ONE block; else None."""
     for leaf in layer_leaf_shapes:
+        if len(leaf) < 3:
+            continue  # per-block scale leaves (L, nb) are not arenas
         L, nb, bs, *rest = leaf
         rest = tuple(rest)
         block = bs * int(np.prod(rest, dtype=np.int64)) if rest else bs
@@ -233,11 +244,58 @@ def stream_gather_hits(jaxpr, layer_leaf_shapes, num_slots: int,
     return hits
 
 
+def _is_fp_arena(aval, layer_leaf_shapes) -> bool:
+    try:
+        fp = (np.issubdtype(aval.dtype, np.floating)
+              or np.issubdtype(aval.dtype, np.complexfloating))
+    except TypeError:
+        return False
+    return (fp and _arena_block_elems(tuple(aval.shape), layer_leaf_shapes)
+            is not None)
+
+
+def quantized_fp_arena_hits(jaxpr, layer_leaf_shapes) -> list[str]:
+    """Floating-typed values at a full KV arena shape in a quantized-mode
+    program.  The int8 contract: the arena leaves stay int8 end to end and
+    dequant is per gathered tile (strictly after the block-table read) —
+    so ANY fp value the size of the whole arena means the fp stream was
+    materialized.  The gather case is called out separately: a float
+    arena-shaped gather operand is the silent upcast-then-gather rewrite
+    (dequantize everything, then read), which doubles arena HBM."""
+    hits = []
+    for eqn in iter_eqns(jaxpr):
+        if (eqn.primitive.name == "gather" and eqn.invars
+                and _is_fp_arena(eqn.invars[0].aval, layer_leaf_shapes)):
+            op = eqn.invars[0].aval
+            hits.append(
+                f"upcast-then-gather: gather over fp arena "
+                f"{tuple(op.shape)} {op.dtype}"
+            )
+        for v in eqn.outvars:
+            if _is_fp_arena(v.aval, layer_leaf_shapes):
+                hits.append(
+                    f"{eqn.primitive.name} -> fp arena-shaped "
+                    f"{tuple(v.aval.shape)} {v.aval.dtype}"
+                )
+    return hits
+
+
 def audit_entry_point(ep: EntryPoint, where: str, *,
                       layer_leaf_shapes=(), num_slots: int = 1) -> list[Finding]:
     findings: list[Finding] = []
     traced = ep.jitfn.trace(*ep.avals)
     jaxpr = traced.jaxpr
+
+    # A-QUANT
+    if ep.quantized and layer_leaf_shapes:
+        hits = quantized_fp_arena_hits(jaxpr, layer_leaf_shapes)
+        if hits:
+            findings.append(Finding(
+                "A-QUANT", "error", where,
+                f"{len(hits)} fp-typed KV arena value(s) in a quantized-mode "
+                f"program (int8 arenas must never materialize the fp "
+                f"stream): {hits}",
+            ))
 
     # A-GATHER
     if ep.gather_budget is not None and ep.bucket and ep.bucket > 1:
@@ -432,6 +490,27 @@ def audit_arch(arch: str, *, tier: str = "full",
                         ))
             finally:
                 attention.FORCE_PAGED_READ = prev
+
+        # Quantized-mode variant: run the same smoke workload with int8
+        # arenas, then audit every entry point with the A-QUANT no-fp-arena
+        # check active and re-pin the trace-key bounds — kv_dtype must not
+        # add compile keys (the bucket grid is dtype-independent).
+        q_engine, q_reqs = build_engine(arch, kv_dtype="int8")
+        q_engine._fused.capture_avals = {}
+        q_engine._decode.capture_avals = {}
+        q_engine.run(q_reqs)
+        q_metrics = q_engine.metrics()
+        findings.extend(audit_trace_keys(
+            q_engine, q_metrics, f"{arch}:int8:trace_keys"))
+        q_leaf_shapes = [tuple(l.shape)
+                         for l in jax.tree.leaves(q_engine.pool.cache["layers"])]
+        for ep in collect_entry_points(q_engine, compile_donation=False):
+            ep.quantized = True
+            findings.extend(audit_entry_point(
+                ep, f"{arch}:int8:{ep.name}",
+                layer_leaf_shapes=q_leaf_shapes,
+                num_slots=q_engine.num_slots,
+            ))
     return findings
 
 

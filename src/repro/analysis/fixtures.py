@@ -22,10 +22,14 @@ from repro.analysis.audit import EntryPoint, audit_entry_point, check_trace_keys
 from repro.analysis.findings import Finding
 
 # A tiny synthetic paged arena: (L=1, nb=8, bs=4, d=6), 2 slots, bucket 4.
+# The (L, nb) entry mirrors a quantized pool's per-block scale leaf — the
+# shape matchers must skip it (it is not an arena).
 _L, _NB, _BS, _D = 1, 8, 4, 6
 _N, _BUCKET = 2, 4
-_LEAF_SHAPES = [(_L, _NB, _BS, _D)]
+_LEAF_SHAPES = [(_L, _NB, _BS, _D), (_L, _NB)]
 _ARENA = jax.ShapeDtypeStruct((_NB, _BS, _D), jnp.float32)
+_ARENA_I8 = jax.ShapeDtypeStruct((_NB, _BS, _D), jnp.int8)
+_SCALE = jax.ShapeDtypeStruct((_NB,), jnp.float32)
 _TABLES = jax.ShapeDtypeStruct((_N, _BUCKET), jnp.int32)
 
 
@@ -45,10 +49,12 @@ def _streamed_read(arena, tables):
     return acc
 
 
-def _entry(name, fn, avals, *, donate=(), budget=None, bucket=None):
+def _entry(name, fn, avals, *, donate=(), budget=None, bucket=None,
+           quantized=False):
     return EntryPoint(
         name=name, jitfn=jax.jit(fn, donate_argnums=donate), avals=avals,
         donate=donate, gather_budget=budget, bucket=bucket,
+        quantized=quantized,
     )
 
 
@@ -135,6 +141,28 @@ def _tracekey_bad():
                             engine_grid=[1, 2, 4])
 
 
+def _quant_bad():
+    # a quantized-mode tick reading a FLOAT arena: the fp stream exists in
+    # HBM and the gather upcasts nothing — it was never int8 to begin with
+    return _audit(_entry("fp_arena_in_quant_mode", _gathered_read,
+                         (_ARENA, _TABLES), quantized=True))
+
+
+def _quant_good():
+    # int8 arena + per-block scales, dequant per streamed tile AFTER the
+    # table read — no fp value ever has the arena's shape
+    def quant_streamed(arena, scale, tables):
+        def body(acc, tbl_col):
+            tile = arena[tbl_col].astype(jnp.float32)   # (N, BS, D)
+            tile = tile * scale[tbl_col][:, None, None]
+            return acc + tile.sum(axis=1), None
+        init = jnp.zeros((_N, _D), jnp.float32)
+        acc, _ = jax.lax.scan(body, init, tables.T)
+        return acc
+    return _audit(_entry("int8_streamed_dequant", quant_streamed,
+                         (_ARENA_I8, _SCALE, _TABLES), quantized=True))
+
+
 def _tracekey_good():
     m = _metrics([1, 2], [1], grid=[1, 2, 4])
     return check_trace_keys(m, "fixture:tracekey_exact",
@@ -148,6 +176,7 @@ AUDIT_FIXTURES = {
     "A-F64": (_f64_bad, _f64_good),
     "A-TRANSFER": (_transfer_bad, _transfer_good),
     "A-TRACEKEY": (_tracekey_bad, _tracekey_good),
+    "A-QUANT": (_quant_bad, _quant_good),
 }
 
 

@@ -64,6 +64,13 @@ _audit(Rule(
     "statically enumerated space, or CountingJit totals disagree with "
     "the derived per-kind bound",
 ))
+_audit(Rule(
+    "A-QUANT", "audit", "error",
+    "quantized-mode (kv_dtype=int8) program holds a floating-typed value "
+    "at a full KV arena shape — the fp stream was materialized (or "
+    "upcast-then-gathered) instead of per-tile dequant after the "
+    "block-table read",
+))
 
 
 # ------------------------------------------------------------ Pass B ------

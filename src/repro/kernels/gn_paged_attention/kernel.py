@@ -53,21 +53,31 @@ def _gn_paged_attention_kernel(
     tables_ref,  # scalar prefetch: (N, max_bt) int32 physical block ids
     starts_ref,  # scalar prefetch: (N,) int32 absolute position of q row 0
     lens_ref,  # scalar prefetch: (N,) int32 post-write context lengths
-    q_ref,  # (1, 1, bq, d) — rows [0, chunk) are the chunk queries
-    k_ref,  # (1, 1, bs_p, d) — physical block tables_ref[n, j]
-    v_ref,  # (1, 1, bs_p, d)
-    coarse_ref,  # (1, 128) exp LUT operand
-    residual_ref,  # (1, 128k) exp LUT operand
-    o_ref,  # (1, 1, bq, d)
-    acc_ref,  # (bq, d) f32 scratch
-    m_ref,  # (bq, 128) f32 scratch
-    l_ref,  # (bq, 128) f32 scratch
-    *,
+    *refs,
+    # quantized=True prepends two scalar-prefetch refs to ``refs``:
+    #   kscale_ref,  # (nb,) f32 per-physical-block K dequant scales
+    #   vscale_ref,  # (nb,) f32 per-physical-block V dequant scales
+    # then, in both modes:
+    #   q_ref,  # (1, 1, bq, d) — rows [0, chunk) are the chunk queries
+    #   k_ref,  # (1, 1, bs_p, d) — physical block tables_ref[n, j]
+    #   v_ref,  # (1, 1, bs_p, d)
+    #   coarse_ref,  # (1, 128) exp LUT operand
+    #   residual_ref,  # (1, 128k) exp LUT operand
+    #   o_ref,  # (1, 1, bq, d)
+    #   acc_ref,  # (bq, d) f32 scratch
+    #   m_ref,  # (bq, 128) f32 scratch
+    #   l_ref,  # (bq, 128) f32 scratch
     cfg: SoftmaxLUTConfig,
     sm_scale: float,
     block_size: int,  # true tokens per block (bs_p >= block_size is padding)
     block_pad: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        kscale_ref, vscale_ref = refs[:2]
+        refs = refs[2:]
+    (q_ref, k_ref, v_ref, coarse_ref, residual_ref,
+     o_ref, acc_ref, m_ref, l_ref) = refs
     n = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -84,6 +94,14 @@ def _gn_paged_attention_kernel(
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale
         k = k_ref[0, 0].astype(jnp.float32)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # per-block dequant AFTER the DMA: the int8 tile is what
+            # streamed in; multiply by the physical block's frozen scale
+            # (the same clamped table index the BlockSpec DMA'd from)
+            last = jnp.maximum((length - 1) // block_size, 0)
+            phys = tables_ref[n, jnp.minimum(j, last)]
+            k = k * kscale_ref[phys]
+            v = v * vscale_ref[phys]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (bq, bs_p)
@@ -150,6 +168,8 @@ def gn_paged_attention_pallas(
     sm_scale: float | None = None,
     block_size: int | None = None,
     interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (nb,) f32 per-block dequant scales
+    v_scale: jax.Array | None = None,  # (nb,) f32
 ) -> jax.Array:
     n, h, bq, d = q.shape
     nb, hkv, bs_p, _ = k_arena.shape
@@ -160,6 +180,7 @@ def gn_paged_attention_pallas(
     block_size = bs_p if block_size is None else block_size
     if sm_scale is None:
         sm_scale = d**-0.5
+    quantized = k_scale is not None
 
     coarse, residual = exp_lut_operands(cfg)
     grid = (n, h, max_bt)
@@ -169,9 +190,12 @@ def gn_paged_attention_pallas(
         sm_scale=float(sm_scale),
         block_size=int(block_size),
         block_pad=bs_p - block_size,
+        quantized=quantized,
     )
 
-    def kv_index(n_, h_, j, tbl, starts_, lens):
+    # index maps take *_ so the same lambdas serve both prefetch arities
+    # (3 scalars fp, 5 scalars with the two per-block scale vectors)
+    def kv_index(n_, h_, j, tbl, starts_, lens, *_):
         # clamp skipped grid steps (j past the sequence's last valid block)
         # to the last valid logical block: the kernel's pl.when already
         # skips their compute, and a repeated index lets the pipeline elide
@@ -181,26 +205,28 @@ def gn_paged_attention_pallas(
         return (tbl[n_, jnp.minimum(j, last)], h_ // group, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=5 if quantized else 3,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(
-                (1, 1, bq, d), lambda n_, h_, j, tbl, starts_, lens: (n_, h_, 0, 0)
-            ),
+            pl.BlockSpec((1, 1, bq, d), lambda n_, h_, j, *_: (n_, h_, 0, 0)),
             pl.BlockSpec((1, 1, bs_p, d), kv_index),
             pl.BlockSpec((1, 1, bs_p, d), kv_index),
-            pl.BlockSpec(coarse.shape, lambda n_, h_, j, tbl, starts_, lens: (0, 0)),
-            pl.BlockSpec(residual.shape, lambda n_, h_, j, tbl, starts_, lens: (0, 0)),
+            pl.BlockSpec(coarse.shape, lambda n_, h_, j, *_: (0, 0)),
+            pl.BlockSpec(residual.shape, lambda n_, h_, j, *_: (0, 0)),
         ],
-        out_specs=pl.BlockSpec(
-            (1, 1, bq, d), lambda n_, h_, j, tbl, starts_, lens: (n_, h_, 0, 0)
-        ),
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda n_, h_, j, *_: (n_, h_, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((bq, d), jnp.float32),
             pltpu.VMEM((bq, 128), jnp.float32),
             pltpu.VMEM((bq, 128), jnp.float32),
         ],
     )
+    scalars = (tables, starts, lengths)
+    if quantized:
+        scalars = scalars + (
+            k_scale.astype(jnp.float32),
+            v_scale.astype(jnp.float32),
+        )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -209,4 +235,4 @@ def gn_paged_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(tables, starts, lengths, q, k_arena, v_arena, coarse, residual)
+    )(*scalars, q, k_arena, v_arena, coarse, residual)

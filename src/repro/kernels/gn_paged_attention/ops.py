@@ -42,17 +42,30 @@ def gn_paged_attention_chunk(
     cfg: SoftmaxLUTConfig = TPU_SOFTMAX_LUT,
     sm_scale: float | None = None,
     interpret: bool = False,
+    scales: tuple[jax.Array, jax.Array] | None = None,  # ((nb,), (nb,)) f32
 ) -> jax.Array:
     """Chunked-query paged read.  Row i of sequence n attends the logical
     stream [0, starts[n] + i] (causal intra-chunk), bounded by the post-write
-    context starts + n_valid.  Returns (N, C, H, D)."""
+    context starts + n_valid.  Returns (N, C, H, D).
+
+    ``scales`` marks the arenas as int8: per-physical-block dequant scales
+    for k and v, applied inside the kernel after each block tile's DMA."""
     n, c, h, d = q.shape
     nb, bs, hkv, _ = k_arena.shape
     if sm_scale is None:
         sm_scale = d**-0.5  # scale uses the TRUE head dim, not the padded one
+    k_scale = v_scale = None
+    if scales is not None:
+        k_scale = scales[0].astype(jnp.float32)
+        v_scale = scales[1].astype(jnp.float32)
 
     d_p = _round_up(d, LANE)
-    bs_p = _round_up(bs, SUBLANE)
+    # quantized (int8) arenas need the (32, 128) minimum TPU tile in the
+    # sublane dim; fp arenas keep the 8-row grid
+    sub = SUBLANE
+    if scales is not None:
+        sub = 32
+    bs_p = _round_up(bs, sub)
     c_p = _round_up(c, SUBLANE)
 
     qp = jnp.pad(
@@ -76,6 +89,8 @@ def gn_paged_attention_chunk(
         sm_scale=float(sm_scale),
         block_size=bs,
         interpret=interpret,
+        k_scale=k_scale,
+        v_scale=v_scale,
     )
     return out[:, :, :c, :d].transpose(0, 2, 1, 3)
 

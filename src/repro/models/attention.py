@@ -239,6 +239,51 @@ def attn_decode_chunk(cfg: ModelConfig, p: dict, cache: dict, x, pos, n_valid):
 # never takes it unless forced or running an exotic baseline softmax.
 FORCE_PAGED_READ: str | None = None
 
+# Headroom multiplier on the first-write per-block amax: a block's scale is
+# set once, from the first token written into it, and later appends to the
+# same block saturate (clip to ±127) rather than rescale — rescaling would
+# rewrite already-quantized history and break the bitwise COW/spill/restore
+# contract.  The margin absorbs later-token amax drift within a block; the
+# GN softmax bounds whatever error saturation leaves (masked numerators are
+# exactly zero and Σp = 1 holds over any numerator perturbation).
+QUANT_MARGIN = 2.0
+
+
+def paged_quant_write(flat_arena, scale, new_vals, dest, block_size: int):
+    """Freeze-at-first-write int8 block scatter.
+
+    flat_arena: (nb*bs, ...) int8; scale: (nb,) f32 per-block scales;
+    new_vals: (n_tok, ...) fp values for destinations ``dest`` ((n_tok,)
+    flattened arena indices, invalid lanes >= nb*bs and dropped).  Returns
+    (new flat_arena, new scale).
+
+    Scale discipline: appends are strictly in-order, so the first write any
+    tenant makes to a physical block lands at in-block offset 0 — that write
+    (re)sets the block's scale from the tick's per-block amax (with
+    ``QUANT_MARGIN`` headroom), which also makes recycled blocks safe
+    without zeroing: the new tenant's offset-0 write overwrites the stale
+    scale.  Every other write reuses the frozen scale and saturates.  A
+    COW-forked partial block keeps its donor's frozen scale (the fork
+    resumes mid-block, offset > 0), so the shared quantized prefix stays
+    bitwise identical through the fork."""
+    nb = scale.shape[0]
+    blk = dest // block_size  # invalid lanes -> nb, dropped by the scatters
+    red = tuple(range(1, new_vals.ndim))
+    amax = jnp.max(jnp.abs(new_vals.astype(jnp.float32)), axis=red)  # (n_tok,)
+    blk_amax = jnp.zeros((nb,), jnp.float32).at[blk].max(amax, mode="drop")
+    first = jnp.zeros((nb,), jnp.int32).at[blk].max(
+        (dest % block_size == 0).astype(jnp.int32), mode="drop"
+    ) > 0
+    scale = jnp.where(first, QUANT_MARGIN * blk_amax / 127.0, scale)
+    s_tok = jnp.take(scale, jnp.minimum(blk, nb - 1))  # (n_tok,)
+    denom = jnp.where(s_tok > 0, s_tok, 1.0).reshape(
+        (new_vals.shape[0],) + (1,) * (new_vals.ndim - 1)
+    )
+    q = jnp.clip(
+        jnp.round(new_vals.astype(jnp.float32) / denom), -127.0, 127.0
+    ).astype(jnp.int8)
+    return flat_arena.at[dest].set(q, mode="drop"), scale
+
 
 def paged_read_path(cfg: ModelConfig) -> str:
     """Which paged attention read the serving tick uses for dense KV:
@@ -256,7 +301,8 @@ def paged_read_path(cfg: ModelConfig) -> str:
     return "streamed" if cfg.softmax_impl in ("gn", "exact") else "gathered"
 
 
-def _stream_paged_tiles(cfg: ModelConfig, qg, arena_k, arena_v, tables, rows):
+def _stream_paged_tiles(cfg: ModelConfig, qg, arena_k, arena_v, tables, rows,
+                        scales=None):
     """Gather-free dense paged read: lax.scan over block tiles.
 
     qg: (N, C, KV, G, dh) in activation dtype; arena_k/arena_v:
@@ -283,6 +329,8 @@ def _stream_paged_tiles(cfg: ModelConfig, qg, arena_k, arena_v, tables, rows):
     """
     bs = arena_k.shape[1]
     scale = cfg.head_dim**-0.5
+    dt = qg.dtype
+    k_scale, v_scale = scales if scales is not None else (None, None)
     tbls = jnp.moveaxis(tables, 1, 0)  # (H, N)
     # unroll a constant factor only: full unrolling would make trace/HLO
     # size linear in the top horizon bucket (512 tiles at max_seq 4096 /
@@ -290,6 +338,11 @@ def _stream_paged_tiles(cfg: ModelConfig, qg, arena_k, arena_v, tables, rows):
 
     def k_body(_, tbl_j):  # tbl_j: (N,) physical block id of logical j
         k_c = arena_k[tbl_j]  # (N, bs, KV, dh)
+        if k_scale is not None:
+            # dequantize strictly AFTER the per-tile gather: the stream-
+            # sized object stays int8, only one (N, bs, KV, dh) tile is
+            # ever fp-resident
+            k_c = k_c.astype(dt) * k_scale[tbl_j].astype(dt)[:, None, None, None]
         return None, jnp.einsum("bskgd,btkd->bkgst", qg, k_c) * scale
 
     _, s_tiles = jax.lax.scan(k_body, None, tbls, unroll=8)  # (H, N, KV, G, C, bs)
@@ -303,13 +356,17 @@ def _stream_paged_tiles(cfg: ModelConfig, qg, arena_k, arena_v, tables, rows):
 
     n = rows.shape[0]
     kv, dh = arena_v.shape[2], arena_v.shape[3]
-    v_at = arena_v[tables].reshape(n, -1, kv, dh)  # horizon-bounded V blocks
+    v_at = arena_v[tables]  # horizon-bounded V blocks (N, H, bs, KV, dh)
+    if v_scale is not None:
+        # int8 blocks gathered first, dequantized per block after the gather
+        v_at = v_at.astype(dt) * v_scale[tables].astype(dt)[..., None, None, None]
+    v_at = v_at.reshape(n, -1, kv, dh)
     pmat = get_softmax(cfg.softmax_impl)(scores).astype(v_at.dtype)
     return jnp.einsum("bkgst,btkd->bskgd", pmat, v_at)
 
 
 def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
-                     n_valid, tables):
+                     n_valid, tables, scales=None):
     """Block-paged chunked append-decode, batched over slots.
 
     The slot-monolithic ``attn_decode_chunk`` owns a (max_seq,) slab per
@@ -337,7 +394,16 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
     default — bitwise equal to the gathered read, K stream never
     materialized), or the gathered oracle (baselines/tests only).
 
-    Returns (out (N, C, D), (new arena_k, new arena_v)).
+    ``scales=(k_scale, v_scale)`` ((num_blocks,) f32 each) switches the
+    arenas to int8 with per-block dequantization scales: writes quantize
+    through ``paged_quant_write`` (freeze-at-first-write) and every read
+    path dequantizes strictly *after* its per-block/per-tile gather, so the
+    fp stream is never materialized at arena width.  The GN LUT-saturation
+    guarantee is what makes this safe: Σp = 1 holds over the dequantized
+    numerators exactly as over the fp ones.
+
+    Returns (out (N, C, D), (new arena_k, new arena_v)) — plus
+    (new k_scale, new v_scale) appended when ``scales`` is given.
     """
     dt = x.dtype
     b, c_len = x.shape[:2]
@@ -354,9 +420,20 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
     kv, dh = cfg.n_kv_heads, cfg.head_dim
     flat_k = arena_k.reshape(nb * bs, kv, dh)
     flat_v = arena_v.reshape(nb * bs, kv, dh)
-    flat_k = flat_k.at[dest].set(k_new.reshape(b * c_len, kv, dh).astype(flat_k.dtype), mode="drop")
-    flat_v = flat_v.at[dest].set(v_new.reshape(b * c_len, kv, dh).astype(flat_v.dtype), mode="drop")
-    arenas = (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape))
+    if scales is not None:
+        k_scale, v_scale = scales
+        flat_k, k_scale = paged_quant_write(
+            flat_k, k_scale, k_new.reshape(b * c_len, kv, dh), dest, bs)
+        flat_v, v_scale = paged_quant_write(
+            flat_v, v_scale, v_new.reshape(b * c_len, kv, dh), dest, bs)
+        arenas = (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape),
+                  k_scale, v_scale)
+        rd_scales = (k_scale, v_scale)
+    else:
+        flat_k = flat_k.at[dest].set(k_new.reshape(b * c_len, kv, dh).astype(flat_k.dtype), mode="drop")
+        flat_v = flat_v.at[dest].set(v_new.reshape(b * c_len, kv, dh).astype(flat_v.dtype), mode="drop")
+        arenas = (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape))
+        rd_scales = None
 
     path = paged_read_path(cfg)
     group = cfg.n_heads // kv
@@ -364,7 +441,8 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
         # single-chip TPU hot path: the Pallas kernel chases the block table
         # with scalar-prefetched index maps instead of materializing the
         # gathered stream (interpret-mode on CPU); same GN datapath, tiled.
-        # Chunked queries ride the same kernel (causal intra-chunk mask).
+        # Chunked queries ride the same kernel (causal intra-chunk mask);
+        # int8 arenas dequantize in-kernel, per block, after the DMA.
         from repro.kernels.gn_paged_attention.ops import gn_paged_attention_chunk
 
         interp = jax.devices()[0].platform != "tpu"
@@ -376,6 +454,7 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
             positions,
             n_valid,
             interpret=interp,
+            scales=rd_scales,
         ).reshape(b, c_len, cfg.q_features)
         out = jnp.einsum("bsf,fd->bsd", out.astype(dt), p["wo"].astype(dt))
         return out, arenas
@@ -385,7 +464,7 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
         out = _stream_paged_tiles(
             cfg, qg,
             flat_k.reshape(nb, bs, kv, dh), flat_v.reshape(nb, bs, kv, dh),
-            tables, rows,
+            tables, rows, scales=rd_scales,
         ).reshape(b, c_len, cfg.q_features)
         out = jnp.einsum("bsf,fd->bsd", out.astype(dt), p["wo"].astype(dt))
         return out, arenas
@@ -393,9 +472,16 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
     # gathered oracle: materialize each slot's logical KV stream (post-write,
     # so the chunk's own keys are already in place — no side concat needed).
     # Tests pin the streamed paths against this; the tick never runs it
-    # unless forced or serving a one-pass-only baseline softmax.
-    k_at = flat_k.reshape(nb, bs, kv, dh)[tables].reshape(b, -1, kv, dh)
-    v_at = flat_v.reshape(nb, bs, kv, dh)[tables].reshape(b, -1, kv, dh)
+    # unless forced or serving a one-pass-only baseline softmax.  Quantized
+    # arenas gather int8 blocks first and dequantize the gathered stream —
+    # the oracle is allowed its materialization.
+    k_at = flat_k.reshape(nb, bs, kv, dh)[tables]
+    v_at = flat_v.reshape(nb, bs, kv, dh)[tables]
+    if rd_scales is not None:
+        k_at = k_at.astype(dt) * k_scale[tables].astype(dt)[..., None, None, None]
+        v_at = v_at.astype(dt) * v_scale[tables].astype(dt)[..., None, None, None]
+    k_at = k_at.reshape(b, -1, kv, dh)
+    v_at = v_at.reshape(b, -1, kv, dh)
     t = k_at.shape[1]  # horizon * bs, tail masked below
 
     valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]  # (N, C, T)

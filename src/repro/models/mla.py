@@ -189,7 +189,7 @@ def mla_paged_read_path(cfg: ModelConfig) -> str:
 
 
 def _mla_stream_tiles(cfg: ModelConfig, p: dict, q_nope, q_rope, arena_ckv,
-                      arena_krope, tables, rows):
+                      arena_krope, tables, rows, scales=None):
     """Gather-free MLA paged read: lax.scan over latent block tiles.
 
     Each k-scan step expands ONE (N, bs) latent tile through wkv_b and emits
@@ -213,15 +213,21 @@ def _mla_stream_tiles(cfg: ModelConfig, p: dict, q_nope, q_rope, arena_ckv,
     n, c = rows.shape
     bs = arena_ckv.shape[1]
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    c_scale, r_scale = scales if scales is not None else (None, None)
     tbls = jnp.moveaxis(tables, 1, 0)  # (H, N)
 
     def k_body(_, tbl_j):  # tbl_j: (N,) physical block id of logical j
-        c_tile = arena_ckv[tbl_j]  # (N, bs, rank)
-        kv = jnp.einsum("btr,rf->btf", c_tile.astype(dt), p["wkv_b"].astype(dt))
+        c_tile = arena_ckv[tbl_j].astype(dt)  # (N, bs, rank)
+        r_tile = arena_krope[tbl_j].astype(dt)  # (N, bs, dr)
+        if c_scale is not None:
+            # dequantize the int8 latent tile AFTER the per-tile gather —
+            # the arena-wide latent stream is never fp-resident
+            c_tile = c_tile * c_scale[tbl_j].astype(dt)[:, None, None]
+            r_tile = r_tile * r_scale[tbl_j].astype(dt)[:, None, None]
+        kv = jnp.einsum("btr,rf->btf", c_tile, p["wkv_b"].astype(dt))
         kv = kv.reshape(n, bs, h, m.qk_nope_head_dim + m.v_head_dim)
         k_nope = kv[..., : m.qk_nope_head_dim]
         v_tile = kv[..., m.qk_nope_head_dim :]
-        r_tile = arena_krope[tbl_j].astype(dt)  # (N, bs, dr)
         s = (
             jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
             + jnp.einsum("bshd,btd->bhst", q_rope, r_tile)
@@ -244,7 +250,7 @@ def _mla_stream_tiles(cfg: ModelConfig, p: dict, q_nope, q_rope, arena_ckv,
 
 
 def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
-                    positions, n_valid, tables):
+                    positions, n_valid, tables, scales=None):
     """Block-paged chunked append-decode over the latent cache, batched over
     slots (see attention.paged ``attn_paged_chunk`` for the table/guard
     contract).  x: (N, C, D); positions/n_valid: (N,); tables: (N, max_bt) —
@@ -255,8 +261,13 @@ def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
     block_size * (rank + rope) scalars instead of full per-head KV.  The
     read is streamed per block tile (``mla_paged_read_path``); the gathered
     full-stream path survives as the baselines/tests oracle.
+
+    ``scales=(c_kv_scale, k_rope_scale)`` ((num_blocks,) f32 each) switches
+    both arenas to int8 with freeze-at-first-write per-block scales (see
+    ``attention.paged_quant_write``); reads dequantize per tile after the
+    gather, and the returned arenas tuple grows the two new scale rows.
     Returns (out, (new arenas))."""
-    from repro.models.attention import paged_write_indices
+    from repro.models.attention import paged_quant_write, paged_write_indices
 
     b, c_len = x.shape[:2]
     nb, bs = arena_ckv.shape[:2]
@@ -267,21 +278,39 @@ def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
     dest = paged_write_indices(rows, n_valid, tables, bs, nb)
     flat_c = arena_ckv.reshape(nb * bs, -1)
     flat_r = arena_krope.reshape(nb * bs, -1)
-    flat_c = flat_c.at[dest].set(c_new.reshape(b * c_len, -1).astype(flat_c.dtype), mode="drop")
-    flat_r = flat_r.at[dest].set(kr_new.reshape(b * c_len, -1).astype(flat_r.dtype), mode="drop")
-    arenas = (flat_c.reshape(arena_ckv.shape), flat_r.reshape(arena_krope.shape))
+    if scales is not None:
+        c_scale, r_scale = scales
+        flat_c, c_scale = paged_quant_write(
+            flat_c, c_scale, c_new.reshape(b * c_len, -1), dest, bs)
+        flat_r, r_scale = paged_quant_write(
+            flat_r, r_scale, kr_new.reshape(b * c_len, -1), dest, bs)
+        arenas = (flat_c.reshape(arena_ckv.shape),
+                  flat_r.reshape(arena_krope.shape), c_scale, r_scale)
+        rd_scales = (c_scale, r_scale)
+    else:
+        flat_c = flat_c.at[dest].set(c_new.reshape(b * c_len, -1).astype(flat_c.dtype), mode="drop")
+        flat_r = flat_r.at[dest].set(kr_new.reshape(b * c_len, -1).astype(flat_r.dtype), mode="drop")
+        arenas = (flat_c.reshape(arena_ckv.shape), flat_r.reshape(arena_krope.shape))
+        rd_scales = None
 
     if mla_paged_read_path(cfg) == "streamed":
         out = _mla_stream_tiles(
             cfg, p, q_nope, q_rope,
             flat_c.reshape(nb, bs, -1), flat_r.reshape(nb, bs, -1),
-            tables, rows,
+            tables, rows, scales=rd_scales,
         )  # (N, C, h*dv) in activation dtype
         dt = x.dtype
         return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt)), arenas
 
-    c_kv = flat_c.reshape(nb, bs, -1)[tables].reshape(b, -1, flat_c.shape[-1])
-    k_rope = flat_r.reshape(nb, bs, -1)[tables].reshape(b, -1, flat_r.shape[-1])
+    dt = x.dtype
+    c_kv = flat_c.reshape(nb, bs, -1)[tables]
+    k_rope = flat_r.reshape(nb, bs, -1)[tables]
+    if rd_scales is not None:
+        # the oracle gathers int8 blocks, then dequantizes its stream
+        c_kv = c_kv.astype(dt) * c_scale[tables].astype(dt)[..., None, None]
+        k_rope = k_rope.astype(dt) * r_scale[tables].astype(dt)[..., None, None]
+    c_kv = c_kv.reshape(b, -1, flat_c.shape[-1])
+    k_rope = k_rope.reshape(b, -1, flat_r.shape[-1])
     t = c_kv.shape[1]
     mask = (jnp.arange(t)[None, None, :] <= rows[:, :, None])[:, None]  # (N,1,C,T)
     out = _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)

@@ -656,27 +656,43 @@ class Model:
         return self.cfg.sliding_window == 0 and self.cfg.family not in ("ssm", "hybrid")
 
     def paged_cache_specs(self, num_slots: int, num_blocks: int,
-                          block_size: int, max_seq: int):
+                          block_size: int, max_seq: int, kv_dtype: str = "fp"):
         """Cache specs with the ``layers`` leaves re-laid as shared block
         arenas: the (slot, max_seq) dims of every per-layer KV/latent leaf
         become (num_blocks, block_size), indexed through per-slot block
         tables instead of a batch dim.  Non-sequence leaves (encdec cross KV,
-        vlm patches) keep their slot-batched layout."""
+        vlm patches) keep their slot-batched layout.
+
+        ``kv_dtype='int8'`` stores every arena in int8 and adds one
+        ``<leaf>_scale`` (L, num_blocks) float32 leaf per arena — the
+        per-block dequantization scale, carried *inside* ``layers`` so every
+        block-axis operation (COW fork, preemption spill/restore, the fused
+        tick's layer scan) moves a block's scale with its payload for free."""
         if not self.supports_paging:
             raise ValueError(f"family {self.cfg.family!r} (sliding_window="
                              f"{self.cfg.sliding_window}) has no pageable KV")
+        if kv_dtype not in ("fp", "int8"):
+            raise ValueError(f"kv_dtype must be 'fp' or 'int8', got {kv_dtype!r}")
         specs = self.cache_specs(num_slots, max_seq)
 
         def repage(s):
             # every 'layers' leaf here is (L, slot, kv_seq, ...): see
             # cache_logical_axes for the dense/MLA families
+            dtype = jnp.int8 if kv_dtype == "int8" else s.dtype
             return jax.ShapeDtypeStruct(
-                (s.shape[0], num_blocks, block_size, *s.shape[3:]), s.dtype
+                (s.shape[0], num_blocks, block_size, *s.shape[3:]), dtype
             )
 
-        return {**specs, "layers": jax.tree.map(repage, specs["layers"])}
+        layers = {k: repage(s) for k, s in specs["layers"].items()}
+        if kv_dtype == "int8":
+            layers.update({
+                f"{k}_scale": jax.ShapeDtypeStruct((v.shape[0], num_blocks),
+                                                   jnp.float32)
+                for k, v in layers.items()
+            })
+        return {**specs, "layers": layers}
 
-    def paged_cache_logical_axes(self):
+    def paged_cache_logical_axes(self, kv_dtype: str = "fp"):
         """Logical sharding axes tree parallel to ``paged_cache_specs``.
 
         The per-layer arenas trade the (slot, kv_seq) dims for (num_blocks,
@@ -686,6 +702,8 @@ class Model:
         a sequence's KV stays resident with its slot shard — while the
         intra-block dim is replicated like any other sequence dim.  Non-paged
         leaves (encdec cross KV, vlm patches) keep their slot-batched axes.
+        Quantized pools add (layer, block) scale leaves whose block axis
+        shards exactly like the arena it scales.
         """
         axes = self.cache_logical_axes()
 
@@ -693,16 +711,19 @@ class Model:
             # (layers, batch/slot, kv_seq, *rest) -> (layers, blocks, in-block, *rest)
             return (ax[0], "batch", None) + tuple(ax[3:])
 
-        layers = jax.tree.map(
-            repage, axes["layers"], is_leaf=lambda x: isinstance(x, tuple)
-        )
+        layers = {k: repage(ax) for k, ax in axes["layers"].items()}
+        if kv_dtype == "int8":
+            layers.update({
+                f"{k}_scale": (ax[0], "batch") for k, ax in layers.items()
+            })
         return {**axes, "layers": layers}
 
     def init_paged_cache(self, num_slots: int, num_blocks: int,
-                         block_size: int, max_seq: int):
+                         block_size: int, max_seq: int, kv_dtype: str = "fp"):
         return jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype),
-            self.paged_cache_specs(num_slots, num_blocks, block_size, max_seq),
+            self.paged_cache_specs(num_slots, num_blocks, block_size, max_seq,
+                                   kv_dtype=kv_dtype),
         )
 
     def insert_cache_slot_extras(self, pool_cache, request_cache, slot):
@@ -751,15 +772,30 @@ class Model:
             lp, lcache = scanned
             h = apply_norm(cfg, lp["ln1"], x)
             if cfg.mla is not None:
-                y, (nck, nkr) = mla_mod.mla_paged_chunk(
-                    cfg, lp["mixer"], lcache["c_kv"], lcache["k_rope"], h,
-                    positions, n_valid, tables)
-                nc = {"c_kv": nck, "k_rope": nkr}
+                if "c_kv_scale" in lcache:  # int8 arenas + per-block scales
+                    y, (nck, nkr, ncs, nrs) = mla_mod.mla_paged_chunk(
+                        cfg, lp["mixer"], lcache["c_kv"], lcache["k_rope"], h,
+                        positions, n_valid, tables,
+                        scales=(lcache["c_kv_scale"], lcache["k_rope_scale"]))
+                    nc = {"c_kv": nck, "k_rope": nkr,
+                          "c_kv_scale": ncs, "k_rope_scale": nrs}
+                else:
+                    y, (nck, nkr) = mla_mod.mla_paged_chunk(
+                        cfg, lp["mixer"], lcache["c_kv"], lcache["k_rope"], h,
+                        positions, n_valid, tables)
+                    nc = {"c_kv": nck, "k_rope": nkr}
             else:
-                y, (nk, nv) = attn.attn_paged_chunk(
-                    cfg, lp["mixer"], lcache["k"], lcache["v"], h,
-                    positions, n_valid, tables)
-                nc = {"k": nk, "v": nv}
+                if "k_scale" in lcache:  # int8 arenas + per-block scales
+                    y, (nk, nv, nks, nvs) = attn.attn_paged_chunk(
+                        cfg, lp["mixer"], lcache["k"], lcache["v"], h,
+                        positions, n_valid, tables,
+                        scales=(lcache["k_scale"], lcache["v_scale"]))
+                    nc = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+                else:
+                    y, (nk, nv) = attn.attn_paged_chunk(
+                        cfg, lp["mixer"], lcache["k"], lcache["v"], h,
+                        positions, n_valid, tables)
+                    nc = {"k": nk, "v": nv}
             x = x + y
             if "mlp" in lp:
                 h2 = apply_norm(cfg, lp["ln2"], x)
@@ -789,15 +825,23 @@ class Model:
         def body(x, scanned):
             lp, lcache, xk, xv = scanned
             h = apply_norm(cfg, lp["ln1"], x)
-            y, (nk, nv) = attn.attn_paged_chunk(
-                cfg, lp["mixer"], lcache["k"], lcache["v"], h,
-                positions, n_valid, tables)
+            if "k_scale" in lcache:
+                y, (nk, nv, nks, nvs) = attn.attn_paged_chunk(
+                    cfg, lp["mixer"], lcache["k"], lcache["v"], h,
+                    positions, n_valid, tables,
+                    scales=(lcache["k_scale"], lcache["v_scale"]))
+                nc = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+            else:
+                y, (nk, nv) = attn.attn_paged_chunk(
+                    cfg, lp["mixer"], lcache["k"], lcache["v"], h,
+                    positions, n_valid, tables)
+                nc = {"k": nk, "v": nv}
             x = x + y
             hx = apply_norm(cfg, lp["ln_x"], x)
             x = x + _cross_attend_cached(cfg, lp["xattn"], hx, xk, xv)
             h2 = apply_norm(cfg, lp["ln2"], x)
             x = x + apply_mlp(cfg, lp["mlp"], h2)
-            return x, {"k": nk, "v": nv}
+            return x, nc
 
         x, new_layers = jax.lax.scan(
             body, x, (params["layers"], cache["layers"], cache["cross"]["k"], cache["cross"]["v"])
@@ -818,13 +862,21 @@ class Model:
             def inner(x2, s2):
                 lp, lc = s2
                 h = apply_norm(cfg, lp["ln1"], x2)
-                y, (nk, nv) = attn.attn_paged_chunk(
-                    cfg, lp["mixer"], lc["k"], lc["v"], h,
-                    positions, n_valid, tables)
+                if "k_scale" in lc:
+                    y, (nk, nv, nks, nvs) = attn.attn_paged_chunk(
+                        cfg, lp["mixer"], lc["k"], lc["v"], h,
+                        positions, n_valid, tables,
+                        scales=(lc["k_scale"], lc["v_scale"]))
+                    nc = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+                else:
+                    y, (nk, nv) = attn.attn_paged_chunk(
+                        cfg, lp["mixer"], lc["k"], lc["v"], h,
+                        positions, n_valid, tables)
+                    nc = {"k": nk, "v": nv}
                 x2 = x2 + y
                 h2 = apply_norm(cfg, lp["ln2"], x2)
                 x2 = x2 + apply_mlp(cfg, lp["mlp"], h2)
-                return x2, {"k": nk, "v": nv}
+                return x2, nc
 
             x, ngc = jax.lax.scan(inner, x, (gp, gc))
             return x, ngc

@@ -293,7 +293,8 @@ class ContinuousEngine:
                  devices: int = 1, paged: Optional[bool] = None,
                  prefix_cache: bool = False,
                  sched: str = "fcfs", preempt: str = "off",
-                 aging_steps: int = 64, shed_backlog: int = 0):
+                 aging_steps: int = 64, shed_backlog: int = 0,
+                 kv_dtype: str = "fp"):
         self.model, self.params, self.cfg = model, params, cfg
         self.num_slots, self.max_seq = int(num_slots), int(max_seq)
         self.chunk = int(chunk)
@@ -364,11 +365,23 @@ class ContinuousEngine:
                 f"family {model.cfg.family!r} (sliding_window="
                 f"{model.cfg.sliding_window}) has no pageable KV"
             )
+        # Quantized paged KV: int8 arenas + per-block f32 dequant scales
+        # carried as cache leaves alongside the arenas.  Paged-only — the
+        # slab pool has no per-block scale granularity to hang scales on.
+        if kv_dtype not in ("fp", "int8"):
+            raise ValueError(f"kv_dtype must be 'fp' or 'int8', got {kv_dtype!r}")
+        if kv_dtype == "int8" and not self.paged:
+            raise ValueError(
+                "kv_dtype='int8' requires the block-paged pool (per-block "
+                "scales live in the block tables); the slab pool is fp-only"
+            )
+        self.kv_dtype = kv_dtype
         if self.paged:
             self.pool = BlockPagedKVPool(
                 model, num_slots, max_seq,
                 block_size=block_size or self.chunk, num_blocks=num_blocks,
                 mesh=self.mesh, num_devices=self.num_devices,
+                kv_dtype=kv_dtype,
             )
             # Horizon-bucket grid: each paged tick slices the traced block
             # tables to the smallest bucket covering the *active block
@@ -1249,6 +1262,7 @@ class ContinuousEngine:
                 # and the mean attended stream width per tick — the
                 # quantity that now scales with live tokens, not max_seq
                 read_path=self.model.paged_read_path,
+                kv_dtype=self.pool.kv_dtype,
                 horizon_bucket_grid=list(self.horizon_bucket_grid),
                 horizon_buckets=sorted(
                     self._buckets_seen["fused"] | self._buckets_seen["decode"]
@@ -1278,4 +1292,5 @@ class ContinuousEngine:
                 )
         else:
             out["read_path"] = "slab"
+            out["kv_dtype"] = "fp"
         return out

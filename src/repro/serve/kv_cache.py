@@ -329,11 +329,12 @@ class BlockPagedKVPool(_SlotRanges):
 
     def __init__(self, model, num_slots: int, max_seq: int,
                  block_size: int, num_blocks: int = 0,
-                 mesh=None, num_devices: int = 0):
+                 mesh=None, num_devices: int = 0, kv_dtype: str = "fp"):
         self.model = model
         self.num_slots = int(num_slots)
         self.max_seq = int(max_seq)
         self.block_size = int(block_size)
+        self.kv_dtype = str(kv_dtype)
         if self.block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         self._init_ranges(self.num_slots, mesh, num_devices)
@@ -346,9 +347,10 @@ class BlockPagedKVPool(_SlotRanges):
         self.blocks_per_device = self.num_blocks // self.num_devices
         self.cache = shard_cache_tree(
             model.init_paged_cache(
-                self.num_slots, self.num_blocks, self.block_size, self.max_seq
+                self.num_slots, self.num_blocks, self.block_size, self.max_seq,
+                kv_dtype=self.kv_dtype,
             ),
-            mesh, model.paged_cache_logical_axes(),
+            mesh, model.paged_cache_logical_axes(kv_dtype=self.kv_dtype),
         )
         self.positions = np.zeros(self.num_slots, np.int32)
         # physical ids; entries past a slot's allocated prefix are stale but
