@@ -144,10 +144,14 @@ def _upsert_history(history: list, row: dict) -> list:
     first appearance) instead of appending a duplicate.  Different SHAs,
     archs, workloads, read paths or KV dtypes never collide, so genuine
     trajectory points are all kept.  Rows predating the quantized pool have
-    no ``kv_dtype`` field and default to "fp" (what they measured)."""
+    no ``kv_dtype`` field and default to "fp" (what they measured); rows
+    predating fault injection have no ``faults`` field and default to
+    "none" (they measured a fault-free engine), so a chaos run never
+    overwrites the clean-trajectory row for the same workload."""
     def _key(r):
         return (r.get("git_sha"), r.get("workload_hash"), r.get("arch"),
-                r.get("read_path"), r.get("kv_dtype", "fp"))
+                r.get("read_path"), r.get("kv_dtype", "fp"),
+                r.get("faults", "none"))
 
     for i, old in enumerate(history):
         if _key(old) == _key(row):
@@ -770,15 +774,203 @@ def run_sla(arch: str = "internlm2-1.8b", n_requests: int = 24,
     return writeout("BENCH_serve", payload)
 
 
+# fault events the sentinels (or the table check) log on detection; a
+# FaultRecord is "detected" when one of these lands at step >= its
+# injection step (docs/serving.md §Fault tolerance)
+_DETECT_EVENTS = ("fault", "fault_table_repair", "device_lost")
+
+
+def _detection_latencies(records, event_log) -> tuple[list, int]:
+    """Per detectable injected fault: engine steps from injection to the
+    first fault event at or after it.  Returns (latencies, undetected)."""
+    steps = sorted(e[1] for e in event_log if e[0] in _DETECT_EVENTS)
+    latencies, undetected = [], 0
+    for rec in records:
+        if not rec.detectable:
+            continue
+        hit = next((s for s in steps if s >= rec.step), None)
+        if hit is None:
+            undetected += 1
+        else:
+            latencies.append(hit - rec.step)
+    return latencies, undetected
+
+
+def run_chaos(arch: str = "internlm2-1.8b", n_requests: int = 8,
+              base_len: int = 10, max_new: int = 8, num_slots: int = 0,
+              chunk: int = 8, devices: int = 1,
+              fault_rates: tuple = (0.0, 0.1, 0.25),
+              kinds: tuple = ("nan_tile", "inf_tile", "table"),
+              seed: int = 0) -> dict:
+    """The fault-tolerance headline: the same workload served under a
+    sweep of per-tick fault-injection rates (seeded ``FaultInjector``,
+    faults landed between ticks so the compile story is untouched),
+    reporting goodput (useful tokens/s from non-failed completions),
+    detection latency in engine ticks, and the recovery-identity rate —
+    asserted at 1.0: every completion the engine does not fail closed is
+    greedy token-identical to the fault-free static oracle even while
+    blocks are being poisoned under it.  One engine serves every rate
+    point (reset between points; detected blocks are scrubbed at
+    quarantine time, so a reset pool recycles no poisoned tile), keeping
+    the sweep inside the PR 5 compile bounds.  History rows carry
+    scenario="chaos" and a ``faults`` config string that is part of the
+    dedupe key, so chaos rows never collide with the clean trajectory."""
+    from repro.serve.faults import FaultInjector
+
+    cfg = reduce_config(get_config(arch))
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    num_slots = round_slots_to_devices(num_slots or max(2, n_requests // 2),
+                                       devices)
+    scfg = ServeConfig()
+    jax.block_until_ready(jnp.zeros(()) + 1)
+
+    reqs = staggered_requests(cfg, n_requests=n_requests, base_len=base_len,
+                              max_new_tokens=max_new, stagger=0, seed=23,
+                              tail_len=0, tail_every=0)
+    max_seq = required_max_seq(reqs)
+    ref = static_reference(model, params, reqs, scfg)
+    # a generous retry budget: the sweep measures detection + recovery,
+    # not budget exhaustion (that path is pinned by test_serve_faults)
+    eng = ContinuousEngine(model, params, num_slots=num_slots,
+                           max_seq=max_seq, cfg=scfg, chunk=chunk,
+                           devices=devices, fault_retry_budget=8)
+    assert eng.sentinels, "chaos scenario needs the sentinel-probed engine"
+    eng.run(reqs)  # warm every trace, so the rate-0 baseline isn't cold
+
+    sweep = []
+    for rate in fault_rates:
+        eng.reset()
+        inj = FaultInjector(eng, seed=seed)
+        rng = np.random.default_rng([seed, int(rate * 1000)])
+        # cap injections so quarantine can't eat the arena at high rates —
+        # the rate still sets the *pressure* (faults per tick early on)
+        cap = max(2, int(round(rate * 20))) if rate else 0
+        for r in reqs:
+            eng.submit(r)
+        injected = 0
+        inject_s = 0.0  # harness cost: each inject round-trips the arena
+        t0 = time.time()
+        while eng.step():
+            if injected < cap and rng.random() < rate:
+                kind = kinds[int(rng.integers(len(kinds)))]
+                ti = time.time()
+                hit = inj.inject(kind)
+                inject_s += time.time() - ti
+                if hit:
+                    injected += 1
+        # goodput charges the engine (detection, quarantine, recompute) but
+        # not the injector's host round-trips — those are the chaos harness,
+        # not the system under test
+        wall = time.time() - t0 - inject_s
+        eng.pool.check_ledger()
+        m = eng.metrics()
+
+        comps = eng.completions
+        ok = [c for c in comps if c.finish_reason in ("length", "stop")]
+        identical = [c for c in ok
+                     if np.array_equal(c.tokens, ref[c.request_id])]
+        # the recovery guarantee: anything not failed closed is exact
+        assert len(identical) == len(ok), \
+            f"rate={rate}: a recovered completion diverged from the oracle"
+        latencies, undetected = _detection_latencies(inj.records, eng.event_log)
+        assert undetected == 0, \
+            f"rate={rate}: {undetected} detectable fault(s) never detected"
+        assert all(l <= 1 for l in latencies), \
+            f"rate={rate}: detection exceeded one tick ({latencies})"
+        if rate == 0.0:
+            assert m["sentinel_checks"] > 0 and m["sentinel_violations"] == 0, \
+                "fault-free run tripped (or never ran) the sentinels"
+            assert len(ok) == len(comps) == len(reqs), \
+                "fault-free run failed requests"
+        useful = sum(int(np.asarray(c.new_tokens).shape[0]) for c in ok)
+        sweep.append({
+            "fault_rate": rate,
+            "faults_injected": injected,
+            "faults_detected": len(latencies),
+            "detection_latency_ticks_mean":
+                float(np.mean(latencies)) if latencies else 0.0,
+            "detection_latency_ticks_max":
+                int(max(latencies)) if latencies else 0,
+            "recovery_identity_rate": len(identical) / max(1, len(ok)),
+            "completions_ok": len(ok),
+            "completions_failed": m["failed_completions"],
+            "goodput_tokens_per_s": useful / max(1e-9, wall),
+            "wall_s": wall,
+            "sentinel_checks": m["sentinel_checks"],
+            "sentinel_violations": m["sentinel_violations"],
+            "quarantined_blocks": m["quarantined_blocks"],
+            "retries": m["retries"],
+            "table_repairs": m["table_repairs"],
+            "fused_step_compilations": m["fused_step_compilations"],
+            "decode_compilations": m["decode_compilations"],
+            "prefill_compilations": m["prefill_compilations"],
+        })
+
+    faults_cfg = (f"kinds={'+'.join(kinds)};"
+                  f"rates={','.join(str(r) for r in fault_rates)};seed={seed}")
+    workload = {
+        "scenario": "chaos",
+        "arch": arch,
+        "n_requests": n_requests,
+        "base_len": base_len,
+        "max_new": max_new,
+        "num_slots": num_slots,
+        "chunk": chunk,
+        "num_devices": devices,
+        "faults": faults_cfg,
+    }
+    base, top = sweep[0], sweep[-1]
+    payload = {
+        "benchmark": "serve",
+        "scenario": "chaos",
+        "arch": arch,
+        "workload": workload,
+        "faults": faults_cfg,
+        "sweep": sweep,
+        "goodput_retention":
+            top["goodput_tokens_per_s"] / max(1e-9,
+                                              base["goodput_tokens_per_s"]),
+        "detection_latency_ticks_max":
+            max(pt["detection_latency_ticks_max"] for pt in sweep),
+        "recovery_identity_rate":
+            min(pt["recovery_identity_rate"] for pt in sweep),
+    }
+    history = _load_history()
+    _upsert_history(history, {
+        "git_sha": _git_sha(),
+        "arch": arch,
+        "scenario": "chaos",
+        "workload_hash": _workload_hash(workload),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "num_devices": devices,
+        "faults": faults_cfg,
+        "goodput_retention": payload["goodput_retention"],
+        "detection_latency_ticks_max": payload["detection_latency_ticks_max"],
+        "recovery_identity_rate": payload["recovery_identity_rate"],
+        "faults_injected": sum(pt["faults_injected"] for pt in sweep),
+        "quarantined_blocks": top["quarantined_blocks"],
+        "completions_failed": sum(pt["completions_failed"] for pt in sweep),
+        "tokens_per_s": top["goodput_tokens_per_s"],
+        "fused_step_compilations": top["fused_step_compilations"],
+        "decode_compilations": top["decode_compilations"],
+        "prefill_compilations": top["prefill_compilations"],
+    })
+    payload["history"] = history[-_HISTORY_MAX:]
+    return writeout("BENCH_serve", payload)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b", choices=list_archs())
     ap.add_argument("--scenario", default="default",
-                    choices=["default", "shared-prefix", "sla"],
+                    choices=["default", "shared-prefix", "sla", "chaos"],
                     help="'shared-prefix': N users x M personas over a "
                          "common system prompt, prefix cache on vs off; "
                          "'sla': bursty two-class open-loop load, FCFS vs "
-                         "priority+preemption per offered rate")
+                         "priority+preemption per offered rate; 'chaos': "
+                         "seeded fault injection swept over per-tick rates "
+                         "— goodput, detection latency, recovery identity")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--base-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -815,7 +1007,46 @@ def main():
                     help="batch anti-starvation bound (engine steps)")
     ap.add_argument("--shed-backlog", type=int, default=0,
                     help="overload shed watermark in pool units (0 = off)")
+    # chaos scenario shape (ignored for the other scenarios)
+    ap.add_argument("--fault-rates", default="0.0,0.1,0.25",
+                    help="comma-separated per-tick fault-injection "
+                         "probabilities to sweep (0.0 = the clean baseline "
+                         "the goodput retention is measured against)")
+    ap.add_argument("--fault-kinds", default="nan_tile,inf_tile,table",
+                    help="comma-separated FaultInjector kinds to draw from "
+                         "(nan_tile, inf_tile, scale, table, bit_flip, "
+                         "device_loss)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the injection schedule + target draws")
     args = ap.parse_args()
+    if args.scenario == "chaos":
+        payload = run_chaos(
+            args.arch, n_requests=args.requests, base_len=args.base_len,
+            max_new=args.new_tokens, num_slots=args.num_slots,
+            chunk=args.chunk, devices=args.devices,
+            fault_rates=tuple(float(r) for r in args.fault_rates.split(",")),
+            kinds=tuple(args.fault_kinds.split(",")), seed=args.fault_seed,
+        )
+        print(json.dumps({k: v for k, v in payload.items() if k != "history"},
+                         indent=2, default=float))
+        print(f"\n{'rate':>6} {'goodput tok/s':>13} {'inj/det':>8} "
+              f"{'lat max':>7} {'quar':>5} {'retry':>5} {'failed':>6} "
+              f"{'identity':>8}")
+        for pt in payload["sweep"]:
+            print(f"{pt['fault_rate']:6.2f} "
+                  f"{pt['goodput_tokens_per_s']:13.1f} "
+                  f"{pt['faults_injected']:3d}/{pt['faults_detected']:<4d} "
+                  f"{pt['detection_latency_ticks_max']:7d} "
+                  f"{pt['quarantined_blocks']:5d} {pt['retries']:5d} "
+                  f"{pt['completions_failed']:6d} "
+                  f"{pt['recovery_identity_rate']*100:7.0f}%")
+        print(f"goodput retention at top fault rate: "
+              f"{payload['goodput_retention']*100:.0f}%  detection <= "
+              f"{payload['detection_latency_ticks_max']} tick(s)  "
+              f"recovery identity {payload['recovery_identity_rate']*100:.0f}% "
+              f"({payload['faults']})  "
+              f"(history: {len(payload['history'])} runs)")
+        return
     if args.scenario == "sla":
         payload = run_sla(
             args.arch, n_requests=args.requests, base_len=args.base_len,

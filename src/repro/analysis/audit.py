@@ -33,6 +33,11 @@ invariants:
   gather operand at arena shape means the whole fp stream was
   materialized before the table was consulted, which is exactly the
   HBM-doubling rewrite the quantized path exists to avoid.
+* **A-SENTINEL** — when GN runtime sentinels are enabled, the tick's
+  trailing health outputs are data-dependent on the tick's inputs
+  (backward-reachable to the jaxpr invars).  A constant-foldable health
+  word means the probes were disconnected — the engine would read
+  "healthy" forever while corruption flows through undetected.
 """
 from __future__ import annotations
 
@@ -95,6 +100,7 @@ class EntryPoint:
     bucket: Optional[int] = None       # horizon bucket of this signature
     compile_donation: bool = False     # verify aliasing in the executable
     quantized: bool = False            # run the A-QUANT no-fp-arena check
+    sentinel_outputs: int = 0          # trailing flat outputs = health words
 
 
 def read_path_for(cfg) -> str:
@@ -159,6 +165,9 @@ def collect_entry_points(engine, *, paged_budget_path: Optional[str] = None,
     budget = (GATHER_BUDGETS.get((paged_budget_path, cfg.mla is not None))
               if paged else None)
 
+    # sentinel-enabled ticks append the health pytree {'head', 'layers'} —
+    # two trailing flat outputs that A-SENTINEL pins to the tick's inputs
+    n_sentinel = 2 if getattr(engine, "sentinels", False) else 0
     for name, cjit in (("fused_tick", engine._fused),
                        ("decode_tick", engine._decode)):
         avals, bucket = _captured_signature(cjit, largest_bucket=paged)
@@ -169,6 +178,7 @@ def collect_entry_points(engine, *, paged_budget_path: Optional[str] = None,
             donate=cjit.donate_argnums,
             gather_budget=budget, bucket=bucket,
             compile_donation=compile_donation,
+            sentinel_outputs=n_sentinel,
         ))
 
     cache_avals = _to_avals(engine.pool.cache)
@@ -280,11 +290,61 @@ def quantized_fp_arena_hits(jaxpr, layer_leaf_shapes) -> list[str]:
     return hits
 
 
+def sentinel_constant_outputs(jaxpr, n_outputs: int) -> list[str]:
+    """The trailing ``n_outputs`` outvars of ``jaxpr`` that are NOT
+    data-dependent on any jaxpr input — backward reachability over the
+    top-level equations (sub-jaxpr bodies need not be entered: a scan/cond
+    whose *equation* consumes an input makes its outputs dependent).  A
+    health output that only reaches literals/constants is a disconnected
+    probe: it would fold to the same 'healthy' word for every tick."""
+    from jax._src.core import Literal
+
+    core = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+    producers = {v: eqn for eqn in core.eqns for v in eqn.outvars}
+    invars = set(core.invars)
+    hits = []
+    for i, out in enumerate(core.outvars[-n_outputs:]):
+        if isinstance(out, Literal):
+            hits.append(f"output[-{n_outputs - i}]: literal {out.val!r}")
+            continue
+        stack, seen, dependent = [out], set(), False
+        while stack:
+            v = stack.pop()
+            if v in invars:
+                dependent = True
+                break
+            if id(v) in seen:
+                continue
+            seen.add(id(v))
+            eqn = producers.get(v)
+            if eqn is None:
+                continue  # constvar: constant-folded, keep scanning others
+            stack.extend(iv for iv in eqn.invars
+                         if not isinstance(iv, Literal))
+        if not dependent:
+            hits.append(
+                f"output[-{n_outputs - i}] {out.aval}: no data path to any "
+                "tick input"
+            )
+    return hits
+
+
 def audit_entry_point(ep: EntryPoint, where: str, *,
                       layer_leaf_shapes=(), num_slots: int = 1) -> list[Finding]:
     findings: list[Finding] = []
     traced = ep.jitfn.trace(*ep.avals)
     jaxpr = traced.jaxpr
+
+    # A-SENTINEL
+    if ep.sentinel_outputs:
+        hits = sentinel_constant_outputs(jaxpr, ep.sentinel_outputs)
+        if hits:
+            findings.append(Finding(
+                "A-SENTINEL", "error", where,
+                f"{len(hits)} sentinel health output(s) not data-dependent "
+                f"on the tick inputs (probe disconnected — corruption would "
+                f"read as healthy): {hits}",
+            ))
 
     # A-QUANT
     if ep.quantized and layer_leaf_shapes:

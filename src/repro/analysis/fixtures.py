@@ -50,11 +50,11 @@ def _streamed_read(arena, tables):
 
 
 def _entry(name, fn, avals, *, donate=(), budget=None, bucket=None,
-           quantized=False):
+           quantized=False, sentinel_outputs=0):
     return EntryPoint(
         name=name, jitfn=jax.jit(fn, donate_argnums=donate), avals=avals,
         donate=donate, gather_budget=budget, bucket=bucket,
-        quantized=quantized,
+        quantized=quantized, sentinel_outputs=sentinel_outputs,
     )
 
 
@@ -163,6 +163,27 @@ def _quant_good():
                          (_ARENA_I8, _SCALE, _TABLES), quantized=True))
 
 
+def _sentinel_bad():
+    # the probe was "optimized away": the tick emits a constant healthy
+    # word regardless of what flows through the attention read
+    def tick(arena, tables):
+        out = _streamed_read(arena, tables)
+        health = jnp.zeros((_N,), jnp.float32)          # disconnected
+        return out, health
+    return _audit(_entry("constant_health_tick", tick, (_ARENA, _TABLES),
+                         sentinel_outputs=1))
+
+
+def _sentinel_good():
+    # health derived from the read itself: Σ-residual style reduction
+    def tick(arena, tables):
+        out = _streamed_read(arena, tables)
+        health = jnp.abs(out.sum(axis=-1) - 1.0)
+        return out, health
+    return _audit(_entry("probed_tick", tick, (_ARENA, _TABLES),
+                         sentinel_outputs=1))
+
+
 def _tracekey_good():
     m = _metrics([1, 2], [1], grid=[1, 2, 4])
     return check_trace_keys(m, "fixture:tracekey_exact",
@@ -177,6 +198,7 @@ AUDIT_FIXTURES = {
     "A-TRANSFER": (_transfer_bad, _transfer_good),
     "A-TRACEKEY": (_tracekey_bad, _tracekey_good),
     "A-QUANT": (_quant_bad, _quant_good),
+    "A-SENTINEL": (_sentinel_bad, _sentinel_good),
 }
 
 

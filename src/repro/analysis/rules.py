@@ -71,6 +71,12 @@ _audit(Rule(
     "upcast-then-gathered) instead of per-tile dequant after the "
     "block-table read",
 ))
+_audit(Rule(
+    "A-SENTINEL", "audit", "error",
+    "a sentinel-enabled tick's trailing health output is not "
+    "data-dependent on the tick inputs (constant-foldable) — the GN "
+    "runtime probe is disconnected and corruption reads as healthy",
+))
 
 
 # ------------------------------------------------------------ Pass B ------

@@ -100,6 +100,29 @@ def restore(path: str | Path, step: int, like) -> tuple:
     return jax.tree_util.tree_unflatten(treedef, vals), manifest
 
 
+def restore_flat(path: str | Path, step: int) -> tuple[dict, dict]:
+    """Restore a checkpoint as its flat ``{path-name: array}`` dict plus the
+    manifest, without a ``like`` tree.  For callers whose tree structure is
+    data-dependent — e.g. the serving engine's crash-consistent snapshots,
+    where per-slot / per-request / per-spill keys exist only while occupied —
+    so no statically-known template can describe the saved set.  Dtypes are
+    decoded exactly as ``restore`` does (raw-bits leaves viewed back)."""
+    path = Path(path) / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    dtypes = manifest.get("dtypes", {})
+    import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
+
+    flat = {}
+    for n in data.files:
+        a = data[n]
+        want = dtypes.get(n)
+        if want and str(a.dtype) != want:
+            a = a.view(np.dtype(want))  # undo the raw-bits encoding
+        flat[n] = a
+    return flat, manifest
+
+
 def restore_sharded(path, step, like, shardings):
     """Elastic restore: place every leaf under the target mesh's sharding.
 

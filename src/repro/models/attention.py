@@ -239,6 +239,85 @@ def attn_decode_chunk(cfg: ModelConfig, p: dict, cache: dict, x, pos, n_valid):
 # never takes it unless forced or running an exotic baseline softmax.
 FORCE_PAGED_READ: str | None = None
 
+# GN sentinel: any per-block dequantization scale above this is treated as
+# corrupt by the in-tick scale-sanity probe.  Legitimate scales are
+# QUANT_MARGIN * amax / 127 — O(activation magnitude / 60) — so the ceiling
+# has orders of magnitude of headroom; only a scribbled/overflowed scale
+# leaf can cross it.
+SCALE_SANITY_MAX = 1e4
+
+
+def _probe_sum_residual(pmat, scores, out, valid, lane_ok):
+    """GN sentinel channel 0, per slot: the Σp residual of this layer's
+    paged attention read, with nonfinite laundering ruled out.
+
+    pmat/scores: (N, *head_axes, C, T); valid: (N, C, T) causal-column
+    mask; lane_ok: (N, C) live-lane mask; out: (N, C, ...) the attention
+    output (pre-wo).  Returns (N,) f32: max over the slot's live lanes of
+    |Σp − 1| — the paper's guaranteed-normalization residual, analytically
+    bounded by (t+1)·2⁻²³ for the GN softmax — forced to +inf when any
+    live-region score or output element is nonfinite.  The explicit
+    finiteness channels matter: GN's snap-to-grid exp *launders* NaN scores
+    into a valid (finite, Σp = 1) distribution, so a poisoned KV block is
+    invisible to the residual alone; NaN K surfaces in ``scores``, NaN V in
+    ``out``."""
+    n = pmat.shape[0]
+    heads = pmat.ndim - 3
+    lane = lane_ok.reshape(n, *([1] * heads), -1)
+    v = valid.reshape(n, *([1] * heads), valid.shape[1], valid.shape[2])
+    sumres = jnp.abs(jnp.sum(pmat.astype(jnp.float32), axis=-1) - 1.0)
+    res = jnp.max(jnp.where(lane, sumres, 0.0), axis=tuple(range(1, 2 + heads)))
+    bad = (~jnp.isfinite(scores)) & v & lane[..., None]
+    bad = jnp.any(bad, axis=tuple(range(1, 3 + heads)))
+    oflat = out.astype(jnp.float32).reshape(n, out.shape[1], -1)
+    obad = jnp.any((~jnp.isfinite(oflat)) & lane_ok[:, :, None], axis=(1, 2))
+    return jnp.where(bad | obad, jnp.inf, res)
+
+
+def paged_probe_word(probe0, positions, n_valid, tables, block_size: int,
+                     rd_scales, clip_tok):
+    """Assemble one layer's (N, 3) sentinel health word.
+
+    Channels: [0] the Σp/finiteness residual from ``_probe_sum_residual``
+    (+inf on any nonfinite live value); [1] the fraction of this tick's
+    int8 writes that saturated (freeze-at-first-write scales clip, never
+    rescale — persistent clipping means the block's frozen scale no longer
+    covers the stream and is the engine's cue for int8→fp fallback); [2] a
+    scale-sanity flag over the slot's live-horizon per-block scales
+    (nonfinite, negative, or > SCALE_SANITY_MAX ⇒ corrupt scale leaf).
+    Parked lanes (n_valid == 0) read stale arena content by design, so
+    every channel is zeroed for them — health is only meaningful for live
+    slots."""
+    n = positions.shape[0]
+    active = n_valid > 0
+    if clip_tok is not None:
+        c_len = clip_tok.shape[0] // n
+        lane_ok = jnp.arange(c_len)[None, :] < n_valid[:, None]
+        ct = clip_tok.reshape(n, c_len)
+        clip = (jnp.sum(jnp.where(lane_ok, ct, False).astype(jnp.float32), axis=1)
+                / jnp.maximum(n_valid, 1).astype(jnp.float32))
+    else:
+        clip = jnp.zeros((n,), jnp.float32)
+    if rd_scales is not None:
+        h = tables.shape[1]
+        max_blk = (positions + jnp.maximum(n_valid, 1) - 1) // block_size
+        blk_ok = jnp.arange(h)[None, :] <= max_blk[:, None]
+        sbad = jnp.zeros((n,), bool)
+        for s in rd_scales:
+            s_at = s[tables]  # (N, H) — tiny, horizon-bounded
+            bad = (~jnp.isfinite(s_at)) | (s_at < 0) | (s_at > SCALE_SANITY_MAX)
+            sbad = sbad | jnp.any(bad & blk_ok, axis=1)
+        scalebad = sbad.astype(jnp.float32)
+    else:
+        scalebad = jnp.zeros((n,), jnp.float32)
+    zero = jnp.zeros((n,), jnp.float32)
+    return jnp.stack([
+        jnp.where(active, probe0, zero),
+        jnp.where(active, clip, zero),
+        jnp.where(active, scalebad, zero),
+    ], axis=1)
+
+
 # Headroom multiplier on the first-write per-block amax: a block's scale is
 # set once, from the first token written into it, and later appends to the
 # same block saturate (clip to ±127) rather than rescale — rescaling would
@@ -249,13 +328,17 @@ FORCE_PAGED_READ: str | None = None
 QUANT_MARGIN = 2.0
 
 
-def paged_quant_write(flat_arena, scale, new_vals, dest, block_size: int):
+def paged_quant_write(flat_arena, scale, new_vals, dest, block_size: int,
+                      return_clip: bool = False):
     """Freeze-at-first-write int8 block scatter.
 
     flat_arena: (nb*bs, ...) int8; scale: (nb,) f32 per-block scales;
     new_vals: (n_tok, ...) fp values for destinations ``dest`` ((n_tok,)
     flattened arena indices, invalid lanes >= nb*bs and dropped).  Returns
-    (new flat_arena, new scale).
+    (new flat_arena, new scale) — plus, with ``return_clip``, an (n_tok,)
+    bool of which writes saturated the ±127 range (the sentinel's
+    clip-fraction channel; frozen scales clip rather than rescale, so
+    persistent clipping is a live overflow signal, not a transient).
 
     Scale discipline: appends are strictly in-order, so the first write any
     tenant makes to a physical block lands at in-block offset 0 — that write
@@ -279,10 +362,12 @@ def paged_quant_write(flat_arena, scale, new_vals, dest, block_size: int):
     denom = jnp.where(s_tok > 0, s_tok, 1.0).reshape(
         (new_vals.shape[0],) + (1,) * (new_vals.ndim - 1)
     )
-    q = jnp.clip(
-        jnp.round(new_vals.astype(jnp.float32) / denom), -127.0, 127.0
-    ).astype(jnp.int8)
-    return flat_arena.at[dest].set(q, mode="drop"), scale
+    q_f = jnp.round(new_vals.astype(jnp.float32) / denom)
+    q = jnp.clip(q_f, -127.0, 127.0).astype(jnp.int8)
+    out = flat_arena.at[dest].set(q, mode="drop")
+    if return_clip:
+        return out, scale, jnp.any(jnp.abs(q_f) > 127.0, axis=red)
+    return out, scale
 
 
 def paged_read_path(cfg: ModelConfig) -> str:
@@ -302,7 +387,7 @@ def paged_read_path(cfg: ModelConfig) -> str:
 
 
 def _stream_paged_tiles(cfg: ModelConfig, qg, arena_k, arena_v, tables, rows,
-                        scales=None):
+                        scales=None, probe_nv=None):
     """Gather-free dense paged read: lax.scan over block tiles.
 
     qg: (N, C, KV, G, dh) in activation dtype; arena_k/arena_v:
@@ -362,11 +447,15 @@ def _stream_paged_tiles(cfg: ModelConfig, qg, arena_k, arena_v, tables, rows,
         v_at = v_at.astype(dt) * v_scale[tables].astype(dt)[..., None, None, None]
     v_at = v_at.reshape(n, -1, kv, dh)
     pmat = get_softmax(cfg.softmax_impl)(scores).astype(v_at.dtype)
-    return jnp.einsum("bkgst,btkd->bskgd", pmat, v_at)
+    out = jnp.einsum("bkgst,btkd->bskgd", pmat, v_at)
+    if probe_nv is not None:
+        lane_ok = jnp.arange(rows.shape[1])[None, :] < probe_nv[:, None]
+        return out, _probe_sum_residual(pmat, scores, out, valid, lane_ok)
+    return out
 
 
 def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
-                     n_valid, tables, scales=None):
+                     n_valid, tables, scales=None, probe=False):
     """Block-paged chunked append-decode, batched over slots.
 
     The slot-monolithic ``attn_decode_chunk`` owns a (max_seq,) slab per
@@ -404,6 +493,15 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
 
     Returns (out (N, C, D), (new arena_k, new arena_v)) — plus
     (new k_scale, new v_scale) appended when ``scales`` is given.
+
+    ``probe=True`` (a static Python bool — the engine binds it as a closure
+    constant, so it adds no trace keys) appends a third return: this
+    layer's (N, 3) GN sentinel health word (see ``paged_probe_word``).  The
+    streamed and gathered reads compute the full Σp-residual/finiteness
+    probe from their materialized score rows; the Pallas kernel keeps its
+    probabilities in-kernel, so its probe is reduced to output finiteness
+    (documented coverage gap: NaN-K laundering is only certified on the
+    streamed/gathered paths — the CPU/GPU default and the CI path).
     """
     dt = x.dtype
     b, c_len = x.shape[:2]
@@ -420,12 +518,22 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
     kv, dh = cfg.n_kv_heads, cfg.head_dim
     flat_k = arena_k.reshape(nb * bs, kv, dh)
     flat_v = arena_v.reshape(nb * bs, kv, dh)
+    clip_tok = None
     if scales is not None:
         k_scale, v_scale = scales
-        flat_k, k_scale = paged_quant_write(
-            flat_k, k_scale, k_new.reshape(b * c_len, kv, dh), dest, bs)
-        flat_v, v_scale = paged_quant_write(
-            flat_v, v_scale, v_new.reshape(b * c_len, kv, dh), dest, bs)
+        if probe:
+            flat_k, k_scale, kclip = paged_quant_write(
+                flat_k, k_scale, k_new.reshape(b * c_len, kv, dh), dest, bs,
+                return_clip=True)
+            flat_v, v_scale, vclip = paged_quant_write(
+                flat_v, v_scale, v_new.reshape(b * c_len, kv, dh), dest, bs,
+                return_clip=True)
+            clip_tok = kclip | vclip
+        else:
+            flat_k, k_scale = paged_quant_write(
+                flat_k, k_scale, k_new.reshape(b * c_len, kv, dh), dest, bs)
+            flat_v, v_scale = paged_quant_write(
+                flat_v, v_scale, v_new.reshape(b * c_len, kv, dh), dest, bs)
         arenas = (flat_k.reshape(arena_k.shape), flat_v.reshape(arena_v.shape),
                   k_scale, v_scale)
         rd_scales = (k_scale, v_scale)
@@ -456,17 +564,36 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
             interpret=interp,
             scales=rd_scales,
         ).reshape(b, c_len, cfg.q_features)
+        if probe:
+            # reduced probe: probabilities stay in-kernel, so only output
+            # finiteness is observable here (see docstring)
+            lane_ok = jnp.arange(c_len)[None, :] < n_valid[:, None]
+            obad = jnp.any(
+                (~jnp.isfinite(out.astype(jnp.float32))) & lane_ok[:, :, None],
+                axis=(1, 2),
+            )
+            probe0 = jnp.where(obad, jnp.inf, 0.0)
         out = jnp.einsum("bsf,fd->bsd", out.astype(dt), p["wo"].astype(dt))
+        if probe:
+            return out, arenas, paged_probe_word(
+                probe0, positions, n_valid, tables, bs, rd_scales, clip_tok)
         return out, arenas
 
     if path == "streamed":
         qg = q.reshape(b, c_len, kv, group, dh)
-        out = _stream_paged_tiles(
+        res = _stream_paged_tiles(
             cfg, qg,
             flat_k.reshape(nb, bs, kv, dh), flat_v.reshape(nb, bs, kv, dh),
             tables, rows, scales=rd_scales,
-        ).reshape(b, c_len, cfg.q_features)
+            probe_nv=n_valid if probe else None,
+        )
+        if probe:
+            res, probe0 = res
+        out = res.reshape(b, c_len, cfg.q_features)
         out = jnp.einsum("bsf,fd->bsd", out.astype(dt), p["wo"].astype(dt))
+        if probe:
+            return out, arenas, paged_probe_word(
+                probe0, positions, n_valid, tables, bs, rd_scales, clip_tok)
         return out, arenas
 
     # gathered oracle: materialize each slot's logical KV stream (post-write,
@@ -493,8 +620,14 @@ def attn_paged_chunk(cfg: ModelConfig, p: dict, arena_k, arena_v, x, positions,
     from repro.core import get_softmax
 
     pmat = get_softmax(cfg.softmax_impl)(scores).astype(v_at.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", pmat, v_at).reshape(b, c_len, cfg.q_features)
-    out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+    att = jnp.einsum("bkgst,btkd->bskgd", pmat, v_at)
+    out = jnp.einsum("bsf,fd->bsd", att.reshape(b, c_len, cfg.q_features),
+                     p["wo"].astype(dt))
+    if probe:
+        lane_ok = jnp.arange(c_len)[None, :] < n_valid[:, None]
+        probe0 = _probe_sum_residual(pmat, scores, att, valid, lane_ok)
+        return out, arenas, paged_probe_word(
+            probe0, positions, n_valid, tables, bs, rd_scales, clip_tok)
     return out, arenas
 
 

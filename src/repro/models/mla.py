@@ -58,8 +58,14 @@ def _project(cfg: ModelConfig, p: dict, x, positions):
     return q_nope, q_rope, c_kv, k_rope
 
 
-def _attend(cfg: ModelConfig, p: dict, q_nope, q_rope, c_kv, k_rope, mask):
-    """Attention against the expanded latent.  c_kv: (b,t,r); k_rope: (b,t,dr)."""
+def _attend(cfg: ModelConfig, p: dict, q_nope, q_rope, c_kv, k_rope, mask,
+            probe_lanes=None):
+    """Attention against the expanded latent.  c_kv: (b,t,r); k_rope: (b,t,dr).
+
+    ``probe_lanes`` ((b, s) live-lane mask) switches on the GN sentinel
+    probe for the paged gathered oracle: the return becomes (out, probe0)
+    with probe0 the (b,) Σp/finiteness residual (see
+    ``attention._probe_sum_residual``)."""
     dt = q_nope.dtype
     m = cfg.mla
     h = cfg.n_heads
@@ -78,8 +84,15 @@ def _attend(cfg: ModelConfig, p: dict, q_nope, q_rope, c_kv, k_rope, mask):
     ) * scale
     scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
     pmat = get_softmax(cfg.softmax_impl)(scores).astype(v.dtype)
-    out = jnp.einsum("bhst,bthd->bshd", pmat, v).reshape(b, s, h * m.v_head_dim)
-    return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt))
+    att = jnp.einsum("bhst,bthd->bshd", pmat, v)
+    out = jnp.einsum("bsf,fd->bsd", att.reshape(b, s, h * m.v_head_dim),
+                     p["wo"].astype(dt))
+    if probe_lanes is not None:
+        from repro.models.attention import _probe_sum_residual
+
+        valid = jnp.broadcast_to(mask, (b, 1, s, t))[:, 0]  # (b, s, t)
+        return out, _probe_sum_residual(pmat, scores, att, valid, probe_lanes)
+    return out
 
 
 def _attend_chunked(cfg: ModelConfig, p: dict, q_nope, q_rope, c_kv, k_rope):
@@ -189,7 +202,7 @@ def mla_paged_read_path(cfg: ModelConfig) -> str:
 
 
 def _mla_stream_tiles(cfg: ModelConfig, p: dict, q_nope, q_rope, arena_ckv,
-                      arena_krope, tables, rows, scales=None):
+                      arena_krope, tables, rows, scales=None, probe_nv=None):
     """Gather-free MLA paged read: lax.scan over latent block tiles.
 
     Each k-scan step expands ONE (N, bs) latent tile through wkv_b and emits
@@ -246,11 +259,17 @@ def _mla_stream_tiles(cfg: ModelConfig, p: dict, q_nope, q_rope, arena_ckv,
     # one AV contraction, bitwise equal to _attend's
     v_at = jnp.moveaxis(v_tiles, 0, 1).reshape(n, -1, h, m.v_head_dim)
     out = jnp.einsum("bhst,bthd->bshd", pmat, v_at)
+    if probe_nv is not None:
+        from repro.models.attention import _probe_sum_residual
+
+        lane_ok = jnp.arange(c)[None, :] < probe_nv[:, None]
+        probe0 = _probe_sum_residual(pmat, scores, out, valid[:, 0], lane_ok)
+        return out.reshape(n, c, h * m.v_head_dim), probe0
     return out.reshape(n, c, h * m.v_head_dim)
 
 
 def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
-                    positions, n_valid, tables, scales=None):
+                    positions, n_valid, tables, scales=None, probe=False):
     """Block-paged chunked append-decode over the latent cache, batched over
     slots (see attention.paged ``attn_paged_chunk`` for the table/guard
     contract).  x: (N, C, D); positions/n_valid: (N,); tables: (N, max_bt) —
@@ -266,8 +285,11 @@ def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
     both arenas to int8 with freeze-at-first-write per-block scales (see
     ``attention.paged_quant_write``); reads dequantize per tile after the
     gather, and the returned arenas tuple grows the two new scale rows.
-    Returns (out, (new arenas))."""
-    from repro.models.attention import paged_quant_write, paged_write_indices
+    Returns (out, (new arenas)) — plus the (N, 3) GN sentinel health word
+    when ``probe=True`` (a static Python bool; see
+    ``attention.attn_paged_chunk``)."""
+    from repro.models.attention import (paged_probe_word, paged_quant_write,
+                                        paged_write_indices)
 
     b, c_len = x.shape[:2]
     nb, bs = arena_ckv.shape[:2]
@@ -278,12 +300,22 @@ def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
     dest = paged_write_indices(rows, n_valid, tables, bs, nb)
     flat_c = arena_ckv.reshape(nb * bs, -1)
     flat_r = arena_krope.reshape(nb * bs, -1)
+    clip_tok = None
     if scales is not None:
         c_scale, r_scale = scales
-        flat_c, c_scale = paged_quant_write(
-            flat_c, c_scale, c_new.reshape(b * c_len, -1), dest, bs)
-        flat_r, r_scale = paged_quant_write(
-            flat_r, r_scale, kr_new.reshape(b * c_len, -1), dest, bs)
+        if probe:
+            flat_c, c_scale, cclip = paged_quant_write(
+                flat_c, c_scale, c_new.reshape(b * c_len, -1), dest, bs,
+                return_clip=True)
+            flat_r, r_scale, rclip = paged_quant_write(
+                flat_r, r_scale, kr_new.reshape(b * c_len, -1), dest, bs,
+                return_clip=True)
+            clip_tok = cclip | rclip
+        else:
+            flat_c, c_scale = paged_quant_write(
+                flat_c, c_scale, c_new.reshape(b * c_len, -1), dest, bs)
+            flat_r, r_scale = paged_quant_write(
+                flat_r, r_scale, kr_new.reshape(b * c_len, -1), dest, bs)
         arenas = (flat_c.reshape(arena_ckv.shape),
                   flat_r.reshape(arena_krope.shape), c_scale, r_scale)
         rd_scales = (c_scale, r_scale)
@@ -294,13 +326,19 @@ def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
         rd_scales = None
 
     if mla_paged_read_path(cfg) == "streamed":
-        out = _mla_stream_tiles(
+        res = _mla_stream_tiles(
             cfg, p, q_nope, q_rope,
             flat_c.reshape(nb, bs, -1), flat_r.reshape(nb, bs, -1),
             tables, rows, scales=rd_scales,
+            probe_nv=n_valid if probe else None,
         )  # (N, C, h*dv) in activation dtype
         dt = x.dtype
-        return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt)), arenas
+        if probe:
+            out, probe0 = res
+            return (jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(dt)), arenas,
+                    paged_probe_word(probe0, positions, n_valid, tables, bs,
+                                     rd_scales, clip_tok))
+        return jnp.einsum("bsf,fd->bsd", res, p["wo"].astype(dt)), arenas
 
     dt = x.dtype
     c_kv = flat_c.reshape(nb, bs, -1)[tables]
@@ -313,6 +351,12 @@ def mla_paged_chunk(cfg: ModelConfig, p: dict, arena_ckv, arena_krope, x,
     k_rope = k_rope.reshape(b, -1, flat_r.shape[-1])
     t = c_kv.shape[1]
     mask = (jnp.arange(t)[None, None, :] <= rows[:, :, None])[:, None]  # (N,1,C,T)
+    if probe:
+        lane_ok = offs[None, :] < n_valid[:, None]
+        out, probe0 = _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask,
+                              probe_lanes=lane_ok)
+        return out, arenas, paged_probe_word(
+            probe0, positions, n_valid, tables, bs, rd_scales, clip_tok)
     out = _attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)
     return out, arenas
 

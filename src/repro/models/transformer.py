@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import get_norm
 from repro.models import attention as attn
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
@@ -742,7 +743,7 @@ class Model:
         return {**pool_cache, **jax.tree.map(upd, extras, request, axes)}
 
     def fused_step_slots_paged(self, params, cache, tokens, positions, n_valid,
-                               tables):
+                               tables, sentinel=False):
         """Block-paged counterpart of ``fused_step_slots``: every slot
         processes its own C-token chunk at its own write offset, but KV lives
         in shared block arenas addressed through per-slot block tables
@@ -757,44 +758,55 @@ class Model:
         gathers each slot's logical stream through its table.  n_valid=0
         parks a lane completely (no writes — an inactive slot owns no
         blocks).  Returns (logits (N, 1, V) — each slot's next-token row
-        n_valid-1 — and the new cache)."""
+        n_valid-1 — and the new cache).
+
+        ``sentinel`` is a static Python bool bound at closure time (never a
+        trace key): when True the return gains a third element, a health
+        pytree ``{"layers": (L, N, 3) f32, "head": (N,) f32}`` of GN
+        sentinel probes (Σp residual / clip fraction / scale sanity per
+        layer, σ residual at the head) accumulated on-device — no host
+        transfer and no extra compile keys."""
         cfg = self.cfg
         dt = jnp.dtype(cfg.dtype)
         x = params["embed"]["tok"].astype(dt)[tokens]  # (N, C, D)
         x = shard(x, "batch", None, "embed_act")
 
         if cfg.family == "vlm":
-            return self._vlm_paged(params, cache, x, positions, n_valid, tables)
+            return self._vlm_paged(params, cache, x, positions, n_valid,
+                                   tables, sentinel)
         if cfg.family == "encdec":
-            return self._encdec_paged(params, cache, x, positions, n_valid, tables)
+            return self._encdec_paged(params, cache, x, positions, n_valid,
+                                      tables, sentinel)
 
         def body(x, scanned):
             lp, lcache = scanned
             h = apply_norm(cfg, lp["ln1"], x)
             if cfg.mla is not None:
                 if "c_kv_scale" in lcache:  # int8 arenas + per-block scales
-                    y, (nck, nkr, ncs, nrs) = mla_mod.mla_paged_chunk(
+                    y, (nck, nkr, ncs, nrs), *pr = mla_mod.mla_paged_chunk(
                         cfg, lp["mixer"], lcache["c_kv"], lcache["k_rope"], h,
                         positions, n_valid, tables,
-                        scales=(lcache["c_kv_scale"], lcache["k_rope_scale"]))
+                        scales=(lcache["c_kv_scale"], lcache["k_rope_scale"]),
+                        probe=sentinel)
                     nc = {"c_kv": nck, "k_rope": nkr,
                           "c_kv_scale": ncs, "k_rope_scale": nrs}
                 else:
-                    y, (nck, nkr) = mla_mod.mla_paged_chunk(
+                    y, (nck, nkr), *pr = mla_mod.mla_paged_chunk(
                         cfg, lp["mixer"], lcache["c_kv"], lcache["k_rope"], h,
-                        positions, n_valid, tables)
+                        positions, n_valid, tables, probe=sentinel)
                     nc = {"c_kv": nck, "k_rope": nkr}
             else:
                 if "k_scale" in lcache:  # int8 arenas + per-block scales
-                    y, (nk, nv, nks, nvs) = attn.attn_paged_chunk(
+                    y, (nk, nv, nks, nvs), *pr = attn.attn_paged_chunk(
                         cfg, lp["mixer"], lcache["k"], lcache["v"], h,
                         positions, n_valid, tables,
-                        scales=(lcache["k_scale"], lcache["v_scale"]))
+                        scales=(lcache["k_scale"], lcache["v_scale"]),
+                        probe=sentinel)
                     nc = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
                 else:
-                    y, (nk, nv) = attn.attn_paged_chunk(
+                    y, (nk, nv), *pr = attn.attn_paged_chunk(
                         cfg, lp["mixer"], lcache["k"], lcache["v"], h,
-                        positions, n_valid, tables)
+                        positions, n_valid, tables, probe=sentinel)
                     nc = {"k": nk, "v": nv}
             x = x + y
             if "mlp" in lp:
@@ -805,50 +817,81 @@ class Model:
                     else apply_mlp(cfg, lp["mlp"], h2)
                 )
                 x = x + y
-            return x, nc
+            return x, ((nc, pr[0]) if sentinel else nc)
 
-        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
-        return self._paged_head(params, x, n_valid), {**cache, "layers": new_layers}
+        x, ys = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        if sentinel:
+            new_layers, probes = ys
+            logits, head = self._paged_head(params, x, n_valid, probe=True)
+            return (logits, {**cache, "layers": new_layers},
+                    {"layers": probes, "head": head})
+        return self._paged_head(params, x, n_valid), {**cache, "layers": ys}
 
-    def _paged_head(self, params, x, n_valid):
+    def _paged_head(self, params, x, n_valid, probe=False):
         """Next-token logits per slot: gather row n_valid-1 (clamped for
         parked lanes), then project only that row — per-row matmuls make the
-        gather bit-exact vs slicing the full projection."""
+        gather bit-exact vs slicing the full projection.
+
+        With ``probe`` (static bool), also returns a (N,) f32 GN-LayerNorm
+        σ-residual sentinel: |mean(x̂²) − 1| of the final-norm output on the
+        gathered row (unit gamma — re-running the registry norm fn keeps
+        the probe pinned to the same impl the head used), forced to +inf
+        when the row or its logits contain nonfinite values, and zeroed for
+        parked lanes."""
         n = x.shape[0]
         idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
         xr = jnp.take_along_axis(x, jnp.broadcast_to(idx, (n, 1, x.shape[-1])), axis=1)
-        return _lm_head(self.cfg, params, xr)
+        logits = _lm_head(self.cfg, params, xr)
+        if not probe:
+            return logits
+        xhat = get_norm(self.cfg.norm_impl)(xr.astype(jnp.float32))
+        sig = jnp.abs(jnp.mean(xhat * xhat, axis=-1) - 1.0)[:, 0]
+        bad = jnp.any(~jnp.isfinite(logits.astype(jnp.float32)),
+                      axis=(1, 2)) | jnp.any(~jnp.isfinite(xr.astype(jnp.float32)),
+                                             axis=(1, 2))
+        head = jnp.where(n_valid > 0,
+                         jnp.where(bad, jnp.inf, sig),
+                         jnp.zeros_like(sig))
+        return logits, head
 
-    def _encdec_paged(self, params, cache, x, positions, n_valid, tables):
+    def _encdec_paged(self, params, cache, x, positions, n_valid, tables,
+                      sentinel=False):
         cfg = self.cfg
 
         def body(x, scanned):
             lp, lcache, xk, xv = scanned
             h = apply_norm(cfg, lp["ln1"], x)
             if "k_scale" in lcache:
-                y, (nk, nv, nks, nvs) = attn.attn_paged_chunk(
+                y, (nk, nv, nks, nvs), *pr = attn.attn_paged_chunk(
                     cfg, lp["mixer"], lcache["k"], lcache["v"], h,
                     positions, n_valid, tables,
-                    scales=(lcache["k_scale"], lcache["v_scale"]))
+                    scales=(lcache["k_scale"], lcache["v_scale"]),
+                    probe=sentinel)
                 nc = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
             else:
-                y, (nk, nv) = attn.attn_paged_chunk(
+                y, (nk, nv), *pr = attn.attn_paged_chunk(
                     cfg, lp["mixer"], lcache["k"], lcache["v"], h,
-                    positions, n_valid, tables)
+                    positions, n_valid, tables, probe=sentinel)
                 nc = {"k": nk, "v": nv}
             x = x + y
             hx = apply_norm(cfg, lp["ln_x"], x)
             x = x + _cross_attend_cached(cfg, lp["xattn"], hx, xk, xv)
             h2 = apply_norm(cfg, lp["ln2"], x)
             x = x + apply_mlp(cfg, lp["mlp"], h2)
-            return x, nc
+            return x, ((nc, pr[0]) if sentinel else nc)
 
-        x, new_layers = jax.lax.scan(
+        x, ys = jax.lax.scan(
             body, x, (params["layers"], cache["layers"], cache["cross"]["k"], cache["cross"]["v"])
         )
-        return self._paged_head(params, x, n_valid), {**cache, "layers": new_layers}
+        if sentinel:
+            new_layers, probes = ys
+            logits, head = self._paged_head(params, x, n_valid, probe=True)
+            return (logits, {**cache, "layers": new_layers},
+                    {"layers": probes, "head": head})
+        return self._paged_head(params, x, n_valid), {**cache, "layers": ys}
 
-    def _vlm_paged(self, params, cache, x, positions, n_valid, tables):
+    def _vlm_paged(self, params, cache, x, positions, n_valid, tables,
+                   sentinel=False):
         cfg = self.cfg
         g = cfg.n_layers // cfg.cross_attn_every
         layers = self._group_tree(params["layers"], g)
@@ -863,26 +906,34 @@ class Model:
                 lp, lc = s2
                 h = apply_norm(cfg, lp["ln1"], x2)
                 if "k_scale" in lc:
-                    y, (nk, nv, nks, nvs) = attn.attn_paged_chunk(
+                    y, (nk, nv, nks, nvs), *pr = attn.attn_paged_chunk(
                         cfg, lp["mixer"], lc["k"], lc["v"], h,
                         positions, n_valid, tables,
-                        scales=(lc["k_scale"], lc["v_scale"]))
+                        scales=(lc["k_scale"], lc["v_scale"]),
+                        probe=sentinel)
                     nc = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
                 else:
-                    y, (nk, nv) = attn.attn_paged_chunk(
+                    y, (nk, nv), *pr = attn.attn_paged_chunk(
                         cfg, lp["mixer"], lc["k"], lc["v"], h,
-                        positions, n_valid, tables)
+                        positions, n_valid, tables, probe=sentinel)
                     nc = {"k": nk, "v": nv}
                 x2 = x2 + y
                 h2 = apply_norm(cfg, lp["ln2"], x2)
                 x2 = x2 + apply_mlp(cfg, lp["mlp"], h2)
-                return x2, nc
+                return x2, ((nc, pr[0]) if sentinel else nc)
 
-            x, ngc = jax.lax.scan(inner, x, (gp, gc))
-            return x, ngc
+            x, ys2 = jax.lax.scan(inner, x, (gp, gc))
+            return x, ys2
 
-        x, nlc = jax.lax.scan(group_body, x, (layers, params["xattn_layers"], lcache))
-        nlc = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nlc)
+        x, ys = jax.lax.scan(group_body, x, (layers, params["xattn_layers"], lcache))
+        if sentinel:
+            nlc, probes = ys
+            nlc = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nlc)
+            probes = probes.reshape(cfg.n_layers, *probes.shape[2:])
+            logits, head = self._paged_head(params, x, n_valid, probe=True)
+            return (logits, {**cache, "layers": nlc},
+                    {"layers": probes, "head": head})
+        nlc = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), ys)
         return self._paged_head(params, x, n_valid), {**cache, "layers": nlc}
 
     # ----------------------------------------------------------- prefill ---

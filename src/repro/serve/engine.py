@@ -58,13 +58,34 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import store as ckpt_store
+from repro.models.attention import SCALE_SANITY_MAX
 from repro.models.transformer import Model
 from repro.parallel.sharding import make_slot_mesh
 from repro.serve.kv_cache import BlockPagedKVPool, SlotKVPool
-from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import (
     Completion, FCFSScheduler, PriorityScheduler, Request, pad_to_grid,
 )
+from repro.serve.prefix_cache import PrefixCache
+
+# --- GN sentinel thresholds (docs/serving.md §Fault tolerance) -------------
+# Σp residual: the paper's analytic bound for a t-term GN softmax sum is
+# (t+1)·ε with ε the softmax compute dtype's machine epsilon — (t+1)·2⁻²³
+# in f32 (pinned empirically in examples/norm_error_study.py), (t+1)·2⁻⁸
+# when the model runs in bf16 (Σp is exact in the kernel's own arithmetic;
+# the probe re-reads the ε-quantized probabilities and re-sums in f32, so
+# it sees up to one ulp per term).  The trip wire sits a small constant
+# above the analytic bound.  Real corruption lands orders of magnitude
+# past either bound (nonfinite, or O(1) deviations), so the slack costs
+# no detection.
+SENTINEL_SUM_SLACK = 4.0
+# GN/exact norm σ residual |mean(x̂²) − 1|, measured in f32 on the f32-cast
+# pre-head activations: exact impls land at f32 rounding (~1e-7); the gn_*
+# impls guarantee normalization to their grid precision (~2⁻¹¹, observed
+# ~1e-5).  1e-3 keeps two orders of headroom over the guarantee while still
+# flagging the O(1) deviations corruption produces.  Approximate norm impls
+# (integer/lut) are only checked for nonfinite values.
+SENTINEL_SIGMA_BOUND = 1e-3
 
 
 class CountingJit:
@@ -294,7 +315,10 @@ class ContinuousEngine:
                  prefix_cache: bool = False,
                  sched: str = "fcfs", preempt: str = "off",
                  aging_steps: int = 64, shed_backlog: int = 0,
-                 kv_dtype: str = "fp"):
+                 kv_dtype: str = "fp", sentinels: Optional[bool] = None,
+                 fault_retry_budget: int = 3,
+                 clip_fallback_frac: float = 0.5, clip_patience: int = 3,
+                 device_loss_min_slots: int = 2):
         self.model, self.params, self.cfg = model, params, cfg
         self.num_slots, self.max_seq = int(num_slots), int(max_seq)
         self.chunk = int(chunk)
@@ -376,6 +400,25 @@ class ContinuousEngine:
                 "scales live in the block tables); the slab pool is fp-only"
             )
         self.kv_dtype = kv_dtype
+        # GN runtime sentinels: in-tick Σp/σ-residual probes accumulated on
+        # device into a per-slot health word, fetched with the tick's token
+        # download and checked against the analytic bound (see
+        # docs/serving.md §Fault tolerance).  ``sentinel`` is a static bool
+        # closed over by the tick bodies — never a trace key — so enabling
+        # them changes neither compile counts nor the tick's input avals.
+        # Default on wherever the probe path exists (the paged tick bodies);
+        # the slab pool has no probe plumbing, so sentinels=True there is an
+        # error rather than a silent no-op.
+        self.sentinels = self.paged if sentinels is None else bool(sentinels)
+        if self.sentinels and not self.paged:
+            raise ValueError(
+                "sentinels ride the paged tick bodies; the slab pool has "
+                "no probe path (pass sentinels=False or paged=True)"
+            )
+        self.fault_retry_budget = int(fault_retry_budget)
+        self.clip_fallback_frac = float(clip_fallback_frac)
+        self.clip_patience = int(clip_patience)
+        self.device_loss_min_slots = int(device_loss_min_slots)
         if self.paged:
             self.pool = BlockPagedKVPool(
                 model, num_slots, max_seq,
@@ -539,6 +582,17 @@ class ContinuousEngine:
         self._resumes = 0
         self._rejections = 0
         self.event_log: list[tuple] = []
+        # fault-tolerance state: sentinel telemetry, per-request fault-evict
+        # retry counts, per-slot consecutive clip-pressure streaks (int8),
+        # and the table-redundancy repair count.  All deterministic under
+        # replay — every fault verdict lands in event_log with its step.
+        self._sentinel_checks = 0
+        self._sentinel_violations = 0
+        self._retries = 0
+        self._fallbacks = 0
+        self._table_repairs = 0
+        self._fault_retries: dict[int, int] = {}
+        self._clip_streak = np.zeros(self.num_slots, np.int32)
         self.scheduler = scheduler or self._make_scheduler()
 
     def _make_scheduler(self) -> FCFSScheduler:
@@ -636,6 +690,13 @@ class ContinuousEngine:
     # Inactive lanes get n_valid=0 — unlike a slab, a parked lane owns no
     # blocks, so its writes must be *dropped*, not merely aimed at a
     # don't-care slab row.
+    #
+    # With sentinels enabled (self.sentinels is a closure constant, not an
+    # argument) both steps return one extra value: the per-slot health
+    # pytree {"layers": (L, N, 3), "head": (N,)} of GN probes, which the
+    # engine downloads with the tick's token fetch and checks host-side.
+    # Health is output-only (never donated, never re-fed), so it changes
+    # neither the donation contract nor the input avals.
 
     def _decode_sample_paged(self, params, cache, last_logits, positions,
                              active, temps, key, tables):
@@ -648,15 +709,18 @@ class ContinuousEngine:
         )
         pos = jnp.where(active, positions, 0)  # clamp dont-care lanes in range
         nv = jnp.where(active, 1, 0).astype(jnp.int32)
-        logits, ncache = self.model.fused_step_slots_paged(
-            params, cache, nxt[:, None], pos, nv, tables
+        out = self.model.fused_step_slots_paged(
+            params, cache, nxt[:, None], pos, nv, tables,
+            sentinel=self.sentinels,
         )
+        logits, ncache = out[0], out[1]
         new_last = jnp.where(
             active[:, None], logits[:, 0].astype(jnp.float32), last_logits
         )
         new_positions = positions + nv.astype(positions.dtype)
-        return (self._pin(nxt, self._sh_slot), self._pin(new_last, self._sh_row),
-                ncache, self._pin(new_positions, self._sh_slot), key)
+        res = (self._pin(nxt, self._sh_slot), self._pin(new_last, self._sh_row),
+               ncache, self._pin(new_positions, self._sh_slot), key)
+        return res + ((out[2],) if self.sentinels else ())
 
     def _fused_step_paged(self, params, cache, last_logits, chunk_tokens,
                           positions, n_valid, is_prefill, active, temps, key,
@@ -674,15 +738,17 @@ class ContinuousEngine:
         nv = jnp.where(active & is_prefill, n_valid, 1)
         nv = jnp.where(active, nv, 0).astype(jnp.int32)
         pos = jnp.where(active, positions, 0)
-        logits, ncache = self.model.fused_step_slots_paged(
-            params, cache, tokens, pos, nv, tables
+        out = self.model.fused_step_slots_paged(
+            params, cache, tokens, pos, nv, tables, sentinel=self.sentinels
         )
+        logits, ncache = out[0], out[1]
         new_last = jnp.where(
             active[:, None], logits[:, 0].astype(jnp.float32), last_logits
         )
         new_positions = positions + jnp.where(active, nv, 0).astype(positions.dtype)
-        return (self._pin(dec, self._sh_slot), self._pin(new_last, self._sh_row),
-                ncache, self._pin(new_positions, self._sh_slot), key)
+        res = (self._pin(dec, self._sh_slot), self._pin(new_last, self._sh_row),
+               ncache, self._pin(new_positions, self._sh_slot), key)
+        return res + ((out[2],) if self.sentinels else ())
 
     # ------------------------------------------------------------ admission --
     def submit(self, req: Request) -> int:
@@ -851,6 +917,7 @@ class ContinuousEngine:
                 preemptions=sus.preemptions if sus else 0,
             )
             self._lanes_dirty = True
+            self._clip_streak[slot] = 0
             self._tick_admitted.add(slot)
             if sus is not None:
                 self._resumes += 1
@@ -1024,10 +1091,244 @@ class ContinuousEngine:
         self.pool.free(slot)
         self._lanes_dirty = True
 
+    # ------------------------------------------------------ fault tolerance --
+    def _check_tables(self) -> None:
+        """Host-side block-table redundancy check.  The per-slot chain
+        (``_slot_blocks``) is the authoritative allocation record; the flat
+        ``tables`` mirror is derived from it.  A divergence (bit-flip, stray
+        write) is repaired from the chain, counted, and logged — the bad row
+        never reaches the device because this runs before the dirty-mirror
+        push in ``step``.  No quarantine or recompute is needed: arena
+        contents were never touched."""
+        for s, st in enumerate(self._slots):
+            if st is None:
+                continue
+            chain = self.pool.chain_of(s)
+            if not chain:
+                continue
+            want = np.asarray(chain, np.int32)
+            if not np.array_equal(self.pool.tables[s, : len(chain)], want):
+                self.pool.tables[s, : len(chain)] = want
+                self.pool.tables_dirty = True
+                self._table_repairs += 1
+                self._sentinel_violations += 1
+                self.event_log.append(
+                    ("fault_table_repair", self.step_count, st.req.id, s)
+                )
+
+    def _sentinel_scan(self, health, live) -> None:
+        """Check every live slot's health word against the GN bounds and
+        contain/recover violations.  Channels (see attention.paged_probe_word
+        and Model._paged_head):
+
+        * layers[:, s, 0] — Σp residual, +inf on nonfinite scores/outputs.
+          Bound: SENTINEL_SUM_SLACK · (t+1) · ε(compute dtype) with t the
+          slot's attended width — (t+1)·2⁻²³ in f32, (t+1)·2⁻⁸ in bf16.
+          NaN-safe comparison (``not (x <= bound)``).
+        * head[s]        — final-norm σ residual, +inf on nonfinite logits.
+        * layers[:, s, 1] — int8 clip fraction: sustained saturation flips
+          the request to the full-precision static path (no quarantine —
+          clipping is a range problem, not corruption).
+        * layers[:, s, 2] — per-block scale sanity (int8): any nonfinite,
+          negative, or implausibly large scale in the slot's live horizon.
+
+        Every violating slot is contained uniformly: its chain is
+        content-scanned, bad blocks are quarantined AND scrubbed (a NaN
+        tile reachable through a stale table entry poisons healthy slots
+        via IEEE 0·NaN=NaN — scrubbing closes that channel; healthy blocks
+        are never zeroed), and the request is rebuilt token-identically via
+        the free-and-recompute resume path under ``fault_retry_budget``.
+        When every live slot on a device violates at once (>=
+        ``device_loss_min_slots``), the whole device is declared lost."""
+        layers = np.asarray(health["layers"], np.float64)  # (L, N, 3)
+        head = np.asarray(health["head"], np.float64)      # (N,)
+        sigma_certified = self.model.cfg.norm_impl.startswith(("gn", "exact"))
+        # ε of the softmax compute dtype: 2⁻²³ (f32) or 2⁻⁸ (bf16)
+        eps = float(jnp.finfo(jnp.dtype(self.model.cfg.dtype)).eps)
+        violating: dict[int, list] = {}
+        for s in live:
+            st = self._slots[s]
+            if st is None:
+                continue
+            self._sentinel_checks += 1
+            kinds = []
+            t = int(self.pool.positions[s])  # attended width incl. this tick
+            bound = SENTINEL_SUM_SLACK * (t + 1) * eps
+            sumres = layers[:, s, 0]
+            worst = float(np.max(sumres))
+            if not (worst <= bound):
+                ok = sumres <= bound
+                kinds.append(("sum", int(np.argmin(ok)), worst))
+            h = float(head[s])
+            if sigma_certified:
+                if not (h <= SENTINEL_SIGMA_BOUND):
+                    kinds.append(("sigma", -1, h))
+            elif not np.isfinite(h):
+                kinds.append(("sigma", -1, h))
+            scl = layers[:, s, 2]
+            if not (float(np.max(scl)) <= 0.0):
+                kinds.append(("scale", int(np.argmax(scl)), float(np.max(scl))))
+            if kinds:
+                violating[s] = kinds
+            elif self.kv_dtype == "int8":
+                # clip-pressure channel, only meaningful on a clean tick
+                frac = float(np.max(layers[:, s, 1]))
+                if frac > self.clip_fallback_frac:
+                    self._clip_streak[s] += 1
+                    if self._clip_streak[s] >= self.clip_patience:
+                        self._int8_fallback(s)
+                else:
+                    self._clip_streak[s] = 0
+        if not violating:
+            return
+        self._sentinel_violations += len(violating)
+        # device-loss aggregation BEFORE eviction mutates residency: a
+        # device whose every live slot (>= the floor) tripped at once is
+        # flaky hardware, not per-block corruption — retire its whole range
+        if self.num_devices > 1:
+            pds = self.num_slots // self.num_devices
+            for d in range(self.num_devices):
+                if d in self.pool._lost_devices:
+                    continue
+                live_d = [s for s in live if s // pds == d
+                          and self._slots[s] is not None]
+                viol_d = [s for s in violating if s // pds == d]
+                if (len(viol_d) >= self.device_loss_min_slots
+                        and len(viol_d) == len(live_d)):
+                    self.pool.mark_device_lost(d)
+                    self.event_log.append(
+                        ("device_lost", self.step_count, d)
+                    )
+        # content diagnosis: quarantine + scrub the actually-corrupt blocks
+        # (a flagged slot with a clean chain is collateral — its table
+        # reached a poisoned block through a stale entry — and recovers the
+        # same way, but its own blocks recycle normally)
+        bad_blocks: set[int] = set()
+        for s in violating:
+            bad_blocks |= self._diagnose_chain(s)
+        for b in sorted(bad_blocks):
+            self.pool.quarantine_block(b)
+            self.event_log.append(("quarantine", self.step_count, int(b)))
+        if bad_blocks:
+            self.pool.scrub_blocks(bad_blocks)
+        # recovery: uniform free-and-recompute resume under the retry budget
+        for s, kinds in violating.items():
+            st = self._slots[s]
+            rid = st.req.id
+            self.event_log.append((
+                "fault", self.step_count, rid, s,
+                tuple(k for k, _, _ in kinds),
+                tuple(lay for _, lay, _ in kinds),
+            ))
+            n = self._fault_retries.get(rid, 0)
+            if n >= self.fault_retry_budget:
+                self._finish(s, "failed")
+            else:
+                self._fault_retries[rid] = n + 1
+                self._retries += 1
+                self._fault_evict(s)
+
+    def _diagnose_chain(self, slot: int) -> set:
+        """Content-scan ``slot``'s block chain and return the physical
+        blocks that are actually corrupt: fp arena tiles with nonfinite
+        values, or int8 per-block scale entries that are nonfinite,
+        negative, or past SCALE_SANITY_MAX.  int8 tiles themselves cannot
+        encode NaN/Inf, and a bit-flipped-but-finite fp tile is below the
+        GN detection floor by design — Σp = 1 holds exactly over wrong
+        finite values — so finiteness is the whole content test."""
+        bad: set[int] = set()
+        chain = self.pool.chain_of(slot)
+        if not chain:
+            return bad
+        ix = jnp.asarray(chain, jnp.int32)
+        pulled = jax.device_get(
+            jax.tree.map(lambda l: jnp.take(l, ix, axis=1),
+                         self.pool.cache["layers"])
+        )
+        for name, arr in pulled.items():
+            a = np.asarray(arr)
+            if name.endswith("_scale"):
+                f = a.astype(np.float64)  # (L, n)
+                mask = ~np.isfinite(f) | (f < 0.0) | (f > SCALE_SANITY_MAX)
+                hit = mask.any(axis=0)
+            elif a.dtype == np.int8:
+                continue
+            else:
+                f = a.astype(np.float32).reshape(a.shape[0], a.shape[1], -1)
+                hit = ~np.isfinite(f).all(axis=(0, 2))
+            for j, b in enumerate(chain):
+                if hit[j]:
+                    bad.add(int(b))
+        return bad
+
+    def _fault_evict(self, slot: int) -> None:
+        """Free-and-recompute resume for a fault-flagged slot: identical to
+        recompute-mode preemption (drop the chain, requeue at the head,
+        re-prefill prompt + generated on resume — token-identical by the
+        chunked-prefill invariant) but available under every scheduling
+        policy, since the victim chose itself."""
+        st = self._slots[slot]
+        rid = st.req.id
+        self._suspended[rid] = _Suspended(
+            generated=st.generated,
+            admit_step=st.admit_step,
+            admit_time=st.admit_time,
+            first_token_step=st.first_token_step,
+            first_token_time=st.first_token_time,
+            preemptions=st.preemptions + 1,
+            spill=None,
+        )
+        self._slots[slot] = None
+        self.pool.free(slot)  # doomed blocks divert to quarantine here
+        self.scheduler.requeue_front(st.req)
+        self._lanes_dirty = True
+        self.event_log.append(("fault_evict", self.step_count, rid, slot))
+
+    def _int8_fallback(self, slot: int) -> None:
+        """Sustained int8 scale-overflow clipping: complete the request on
+        the full-precision static path.  Clipping is quantizer range
+        pressure, not corruption — the request's history is intact, so the
+        static engine re-prefills prompt + generated-so-far in fp and
+        decodes the remaining budget greedily (sampled requests fall back
+        greedily too: the per-slot key stream cannot be replayed off-path).
+        """
+        st = self._slots[slot]
+        req = st.req
+        self._fallbacks += 1
+        self.event_log.append(("kv_fallback", self.step_count, req.id, slot))
+        seq = np.concatenate([
+            np.asarray(req.tokens, np.int32),
+            np.asarray(st.generated, np.int32),
+        ])
+        remaining = req.max_new_tokens - len(st.generated)
+        reason = "length"
+        if remaining > 0:
+            batch = {"tokens": jnp.asarray(seq)[None]}
+            for k in req.extras:
+                batch[k] = jnp.asarray(req.extras[k])[None]
+            gcfg = dataclasses.replace(
+                self.cfg, max_new_tokens=remaining, temperature=0.0
+            )
+            row = np.asarray(generate(self.model, self.params, batch, gcfg))[0]
+            gen = list(st.generated)
+            for tok in row[seq.shape[0]:]:
+                gen.append(int(tok))
+                if req.stop_token is not None and int(tok) == req.stop_token:
+                    reason = "stop"
+                    break
+            st.generated = gen
+        self._finish(slot, reason)
+
     # ----------------------------------------------------------- main loop --
     def step(self) -> bool:
         """One engine tick.  Returns False once fully drained (no active
         slot, nothing queued)."""
+        if self.paged and self.sentinels:
+            # block-table redundancy check BEFORE the mirror is pushed to
+            # device: the host chain (_slot_blocks) is authoritative, the
+            # flat table row is derived — a scribbled entry is repaired in
+            # place and the scribble never reaches a device gather.
+            self._check_tables()
         self._admit()
         live = [s for s, st in enumerate(self._slots) if st is not None]
         if not live:
@@ -1112,25 +1413,32 @@ class ContinuousEngine:
             pref_dev = self._put(jnp.asarray(is_pref), self._sh_slot)
             with jax.transfer_guard_host_to_device("disallow"):
                 self._guarded_ticks += 1
-                nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
-                    self._fused(
-                        self.params, self.pool.cache, self._last_logits, chunk_dev,
-                        self._pos_dev, nv_dev, pref_dev, self._active_dev,
-                        self._temps_dev, self._key, *paged_args,
-                    )
+                outs = self._fused(
+                    self.params, self.pool.cache, self._last_logits, chunk_dev,
+                    self._pos_dev, nv_dev, pref_dev, self._active_dev,
+                    self._temps_dev, self._key, *paged_args,
                 )
+            # rebind the donated operands immediately after the call that
+            # invalidated them, per branch — never across the if/else join
+            nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
+                outs[:5])
             self._fused_ticks += 1
         else:  # steady state: every live slot decodes -> the (N, 1) step
             with jax.transfer_guard_host_to_device("disallow"):
                 self._guarded_ticks += 1
-                nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
-                    self._decode(
-                        self.params, self.pool.cache, self._last_logits,
-                        self._pos_dev, self._active_dev, self._temps_dev, self._key,
-                        *paged_args,
-                    )
+                outs = self._decode(
+                    self.params, self.pool.cache, self._last_logits,
+                    self._pos_dev, self._active_dev, self._temps_dev, self._key,
+                    *paged_args,
                 )
-        toks = jax.device_get(nxt)
+            nxt, self._last_logits, self.pool.cache, self._pos_dev, self._key = (
+                outs[:5])
+        if self.sentinels:
+            # one fetch for token + health: the health word rides the tick's
+            # existing device->host download, no extra transfer
+            toks, health = jax.device_get((nxt, outs[5]))
+        else:
+            toks, health = jax.device_get(nxt), None
         self.pool.advance({s: takes.get(s, 1) for s in live})
         self._active_steps += len(live)
         self._prefill_lane_steps += len(prefills)
@@ -1138,8 +1446,17 @@ class ContinuousEngine:
         self._generated += len(decoders)
         self.phase_log.append((len(prefills), len(decoders)))
 
+        if health is not None:
+            # sentinel scan runs BEFORE token append: a violating slot's
+            # tick output is garbage, so its token must never land in
+            # st.generated — the slot is evicted (recompute resume) or
+            # failed here, and the loops below skip it (st is None).
+            self._sentinel_scan(health, live)
+
         for slot in prefills:
             st = self._slots[slot]
+            if st is None:  # fault-evicted this tick
+                continue
             st.written += takes[slot]
             if st.written == st.prefill_len:
                 st.phase = "decoding"  # first token samples next tick
@@ -1148,6 +1465,8 @@ class ContinuousEngine:
                     self._prefix_insert(slot, (st.req.prompt_len // bs) * bs)
         for slot in decoders:
             st = self._slots[slot]
+            if st is None:  # fault-evicted (or fell back) this tick
+                continue
             tok = int(toks[slot])
             st.generated.append(tok)
             if len(st.generated) == 1:
@@ -1179,6 +1498,458 @@ class ContinuousEngine:
             if self.step_count > budget:
                 raise RuntimeError("ContinuousEngine failed to drain workload")
         return self.completions
+
+    # ------------------------------------------------------------ snapshots --
+    # Crash-consistent engine snapshots over checkpoint/store.py's atomic
+    # npz + manifest format.  snapshot() may only be called between ticks —
+    # step() boundaries are the engine's only consistent points — and
+    # serializes EVERYTHING the next tick reads: arenas/scales (or slabs),
+    # block tables and the whole pool ledger (including FIFO free-list
+    # ORDER, which replay identity leans on), held logits, the PRNG key,
+    # scheduler queues, live-slot and suspended-request state, completions,
+    # counters and the event log.  restore() onto a compatibly-constructed
+    # engine resumes greedy-token-identically: same values + same order +
+    # same key => same tokens (verified by the kill-at-every-tick test).
+
+    def _topology(self) -> dict:
+        t = {
+            "family": self.model.cfg.family,
+            "norm_impl": self.model.cfg.norm_impl,
+            "num_slots": self.num_slots,
+            "max_seq": self.max_seq,
+            "chunk": self.chunk,
+            "paged": self.paged,
+            "kv_dtype": self.kv_dtype,
+            "num_devices": self.num_devices,
+            "sched": self.sched_policy,
+            "preempt": self.preempt_mode,
+            "seed": self.cfg.seed,
+            "sentinels": self.sentinels,
+        }
+        if self.paged:
+            t["block_size"] = self.pool.block_size
+            t["num_blocks"] = self.pool.num_blocks
+        return t
+
+    @staticmethod
+    def _req_arrays(req: Request, tree: dict, prefix: str) -> dict:
+        tree[f"{prefix}/tokens"] = np.asarray(req.tokens, np.int32)
+        if req.padded_tokens is not None:
+            tree[f"{prefix}/padded"] = np.asarray(req.padded_tokens, np.int32)
+        for k, v in req.extras.items():
+            tree[f"{prefix}/extras/{k}"] = np.asarray(v)
+        return {
+            "max_new_tokens": req.max_new_tokens,
+            "temperature": req.temperature,
+            "stop_token": req.stop_token,
+            "arrival_step": req.arrival_step,
+            "prefix_hint": req.prefix_hint,
+            "req_class": req.req_class,
+            "has_padded": req.padded_tokens is not None,
+            "extras_keys": sorted(req.extras.keys()),
+        }
+
+    def snapshot(self, path) -> "str":
+        """Write a crash-consistent snapshot under ``path`` (atomic: a kill
+        mid-save never corrupts an existing snapshot).  Returns the
+        checkpoint directory.  Unsupported with an attached prefix cache
+        (the radix index is not serialized)."""
+        if self.prefix is not None:
+            raise ValueError(
+                "snapshot with an attached prefix cache is not supported"
+            )
+        tree: dict = {
+            "cache": jax.device_get(self.pool.cache),
+            "last_logits": np.asarray(self._last_logits),
+            "key": np.asarray(self._key),
+            "temps": np.asarray(self._temps),
+            "positions": np.asarray(self.pool.positions),
+            "clip_streak": np.asarray(self._clip_streak),
+            "device_admits": np.asarray(self._device_admits),
+        }
+        requests: dict[int, Request] = {}
+        slots_meta = {}
+        for s, st in enumerate(self._slots):
+            if st is None:
+                continue
+            requests[st.req.id] = st.req
+            if st.padded is not None:
+                tree[f"slot/{s}/padded"] = np.asarray(st.padded, np.int32)
+            slots_meta[str(s)] = {
+                "rid": st.req.id,
+                "admit_step": st.admit_step,
+                "admit_time": st.admit_time,
+                "generated": [int(t) for t in st.generated],
+                "phase": st.phase,
+                "written": st.written,
+                "prefill_len": st.prefill_len,
+                "first_token_step": st.first_token_step,
+                "first_token_time": st.first_token_time,
+                "preemptions": st.preemptions,
+                "has_padded": st.padded is not None,
+            }
+        if self.sched_policy == "priority":
+            sched_meta = {
+                "queues": {
+                    c: [r.id for r in q]
+                    for c, q in self.scheduler._queues.items()
+                },
+                "resumed": sorted(self.scheduler._resumed),
+                "shed_count": self.scheduler.shed_count,
+            }
+            queued = [r for q in self.scheduler._queues.values() for r in q]
+        else:
+            sched_meta = {"queue": [r.id for r in self.scheduler._queue]}
+            queued = list(self.scheduler._queue)
+        for r in queued:
+            requests[r.id] = r
+        sched_meta["next_id"] = self.scheduler._next_id
+        sched_meta["pad_tokens"] = self.scheduler._pad_tokens
+        req_meta = {
+            str(rid): self._req_arrays(r, tree, f"req/{rid}")
+            for rid, r in requests.items()
+        }
+        sus_meta = {}
+        for rid, sus in self._suspended.items():
+            spill_meta = None
+            if sus.spill is not None:
+                sp = sus.spill
+                spill_meta = {
+                    "position": sp["position"],
+                    "written": sp["written"],
+                    "prefill_len": sp["prefill_len"],
+                    "phase": sp["phase"],
+                    "has_padded": sp["padded"] is not None,
+                }
+                tree[f"sus/{rid}/last_logits"] = np.asarray(sp["last_logits"])
+                if sp["padded"] is not None:
+                    tree[f"sus/{rid}/padded"] = np.asarray(sp["padded"], np.int32)
+                if self.paged:
+                    spill_meta["len"] = sp["kv"]["len"]
+                    if sp["kv"]["layers"] is not None:
+                        tree[f"sus/{rid}/kv"] = sp["kv"]["layers"]
+                else:
+                    tree[f"sus/{rid}/kv"] = sp["kv"]
+            sus_meta[str(rid)] = {
+                "generated": [int(t) for t in sus.generated],
+                "admit_step": sus.admit_step,
+                "admit_time": sus.admit_time,
+                "first_token_step": sus.first_token_step,
+                "first_token_time": sus.first_token_time,
+                "preemptions": sus.preemptions,
+                "spill": spill_meta,
+            }
+        comp_meta = []
+        for i, c in enumerate(self.completions):
+            tree[f"comp/{i}/prompt"] = np.asarray(c.prompt_tokens, np.int32)
+            tree[f"comp/{i}/new"] = np.asarray(c.new_tokens, np.int32)
+            comp_meta.append({
+                "request_id": c.request_id,
+                "finish_reason": c.finish_reason,
+                "arrival_step": c.arrival_step,
+                "admit_step": c.admit_step,
+                "first_token_step": c.first_token_step,
+                "finish_step": c.finish_step,
+                "admit_time": c.admit_time,
+                "first_token_time": c.first_token_time,
+                "finish_time": c.finish_time,
+                "req_class": c.req_class,
+                "preemptions": c.preemptions,
+            })
+        if self.paged:
+            pool_meta = {
+                "free_slots": list(self.pool._free_slots),
+                "used": sorted(self.pool._used),
+                "slot_blocks": {
+                    str(s): list(ch)
+                    for s, ch in self.pool._slot_blocks.items()
+                },
+                "free_blocks": [list(q) for q in self.pool._free_blocks],
+                "quarantined": sorted(self.pool.quarantined),
+                "doomed": sorted(self.pool._doomed),
+                "lost_devices": sorted(self.pool._lost_devices),
+                "peak_blocks_in_use": self.pool.peak_blocks_in_use,
+                "peak_blocks_reserved": self.pool.peak_blocks_reserved,
+                "peak_reserved_per_device": [
+                    int(x) for x in self.pool.peak_reserved_per_device
+                ],
+                "peak_used_per_device": [
+                    int(x) for x in self.pool.peak_used_per_device
+                ],
+            }
+            tree["tables"] = np.asarray(self.pool.tables)
+            tree["refcounts"] = np.asarray(self.pool.refcounts)
+            tree["reserved"] = np.asarray(self.pool._reserved)
+            tree["shared"] = np.asarray(self.pool._shared)
+            tree["owned"] = np.asarray(self.pool._owned)
+        else:
+            pool_meta = {
+                "free": list(self.pool._free),
+                "used": sorted(self.pool._used),
+            }
+        extra = {
+            "topology": self._topology(),
+            "step_count": self.step_count,
+            "counters": {
+                "active_steps": self._active_steps,
+                "decode_steps": self._decode_steps,
+                "fused_ticks": self._fused_ticks,
+                "prefill_lane_steps": self._prefill_lane_steps,
+                "generated": self._generated,
+                "guarded_ticks": self._guarded_ticks,
+                "attended_tokens": self._attended_tokens,
+                "preemptions": self._preemptions,
+                "resumes": self._resumes,
+                "rejections": self._rejections,
+                "sentinel_checks": self._sentinel_checks,
+                "sentinel_violations": self._sentinel_violations,
+                "retries": self._retries,
+                "fallbacks": self._fallbacks,
+                "table_repairs": self._table_repairs,
+            },
+            "phase_log": [list(x) for x in self.phase_log],
+            "horizon_log": [list(x) for x in self.horizon_log],
+            "buckets_seen": {
+                k: sorted(v) for k, v in self._buckets_seen.items()
+            },
+            "event_log": [list(e) for e in self.event_log],
+            "fault_retries": {
+                str(k): v for k, v in self._fault_retries.items()
+            },
+            "slots": slots_meta,
+            "requests": req_meta,
+            "scheduler": sched_meta,
+            "suspended": sus_meta,
+            "completions": comp_meta,
+            "pool": pool_meta,
+        }
+        return str(ckpt_store.save(path, self.step_count, tree, extra=extra))
+
+    @staticmethod
+    def _nest(flat: dict, prefix: str) -> dict:
+        """Rebuild a nested dict from flat ``prefix/...`` keys (digit path
+        components become int keys — SSM carry trees index layers by int)."""
+        out: dict = {}
+        for name, arr in flat.items():
+            if not name.startswith(prefix):
+                continue
+            parts = [
+                int(p) if p.isdigit() else p
+                for p in name[len(prefix):].split("/")
+            ]
+            d = out
+            for p in parts[:-1]:
+                d = d.setdefault(p, {})
+            d[parts[-1]] = arr
+        return out
+
+    def _restore_request(self, flat: dict, rid: int, meta: dict) -> Request:
+        return Request(
+            tokens=np.asarray(flat[f"req/{rid}/tokens"], np.int32),
+            max_new_tokens=meta["max_new_tokens"],
+            temperature=meta["temperature"],
+            stop_token=meta["stop_token"],
+            arrival_step=meta["arrival_step"],
+            extras={
+                k: np.asarray(flat[f"req/{rid}/extras/{k}"])
+                for k in meta["extras_keys"]
+            },
+            id=rid,
+            padded_tokens=(
+                np.asarray(flat[f"req/{rid}/padded"], np.int32)
+                if meta["has_padded"] else None
+            ),
+            prefix_hint=meta["prefix_hint"],
+            req_class=meta["req_class"],
+        )
+
+    def restore(self, path, step: Optional[int] = None) -> None:
+        """Restore a ``snapshot`` into this engine (freshly constructed with
+        the same model/params and a matching topology).  ``step`` defaults
+        to the latest snapshot under ``path``.  After restore the engine
+        continues greedy-token-identically to the run that wrote it."""
+        if step is None:
+            step = ckpt_store.latest_step(path)
+            if step is None:
+                raise FileNotFoundError(f"no snapshot under {path}")
+        flat, manifest = ckpt_store.restore_flat(path, step)
+        extra = manifest["extra"]
+        want = extra["topology"]
+        have = self._topology()
+        diff = {k: (v, have.get(k)) for k, v in want.items() if have.get(k) != v}
+        if diff:
+            raise ValueError(f"snapshot topology mismatch: {diff}")
+        self.reset()
+        # --- device state -------------------------------------------------
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(self.pool.cache)
+        vals = []
+        for kpath, leaf in leaves:
+            name = "cache/" + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in kpath
+            )
+            # match the fresh leaf's commitment, not just its sharding: an
+            # uncommitted leaf re-placed with an explicit device_put comes
+            # back *committed*, which is part of the pjit compilation-cache
+            # key — every warmed tick entry would silently recompile
+            new = jnp.asarray(flat[name], leaf.dtype)
+            vals.append(jax.device_put(new, leaf.sharding)
+                        if leaf.committed else new)
+        self.pool.cache = jax.tree_util.tree_unflatten(treedef, vals)
+        self._last_logits = self._put(
+            jnp.asarray(flat["last_logits"]), self._sh_row
+        )
+        self._key = self._put(jnp.asarray(flat["key"]), self._sh_rep)
+        self._temps = np.array(flat["temps"], np.float32)
+        self.pool.positions[:] = flat["positions"]
+        self._clip_streak = np.array(flat["clip_streak"], np.int32)
+        self._device_admits = np.array(flat["device_admits"], np.int64)
+        self._lanes_dirty = True  # step() refreshes pos/active/temps mirrors
+        # --- pool ledger --------------------------------------------------
+        import collections
+        p = extra["pool"]
+        if self.paged:
+            self.pool.tables[:] = flat["tables"]
+            self.pool.tables_dirty = True
+            self.pool.refcounts = np.array(flat["refcounts"], np.int32)
+            self.pool._reserved = np.array(flat["reserved"], np.int32)
+            self.pool._shared = np.array(flat["shared"], np.int32)
+            self.pool._owned = np.array(flat["owned"], np.int32)
+            self.pool._free_slots = collections.deque(p["free_slots"])
+            self.pool._used = set(p["used"])
+            self.pool._slot_blocks = {
+                int(s): list(ch) for s, ch in p["slot_blocks"].items()
+            }
+            self.pool._free_blocks = [
+                collections.deque(q) for q in p["free_blocks"]
+            ]
+            self.pool.quarantined = set(p["quarantined"])
+            self.pool._doomed = set(p["doomed"])
+            self.pool._lost_devices = set(p["lost_devices"])
+            self.pool.peak_blocks_in_use = p["peak_blocks_in_use"]
+            self.pool.peak_blocks_reserved = p["peak_blocks_reserved"]
+            self.pool.peak_reserved_per_device = np.array(
+                p["peak_reserved_per_device"], np.int64
+            )
+            self.pool.peak_used_per_device = np.array(
+                p["peak_used_per_device"], np.int64
+            )
+            self.pool.check_ledger()
+        else:
+            self.pool._free = collections.deque(p["free"])
+            self.pool._used = set(p["used"])
+        # --- requests / scheduler / slots / suspended ---------------------
+        reqs = {
+            int(rid): self._restore_request(flat, int(rid), m)
+            for rid, m in extra["requests"].items()
+        }
+        sm = extra["scheduler"]
+        self.scheduler._next_id = sm["next_id"]
+        self.scheduler._pad_tokens = sm["pad_tokens"]
+        if self.sched_policy == "priority":
+            for c, ids in sm["queues"].items():
+                self.scheduler._queues[c] = collections.deque(
+                    reqs[rid] for rid in ids
+                )
+            self.scheduler._resumed = set(sm["resumed"])
+            self.scheduler.shed_count = sm["shed_count"]
+        else:
+            self.scheduler._queue = collections.deque(
+                reqs[rid] for rid in sm["queue"]
+            )
+        for s_str, m in extra["slots"].items():
+            s = int(s_str)
+            self._slots[s] = _SlotState(
+                req=reqs[m["rid"]],
+                admit_step=m["admit_step"],
+                admit_time=m["admit_time"],
+                generated=list(m["generated"]),
+                phase=m["phase"],
+                padded=(
+                    np.asarray(flat[f"slot/{s}/padded"], np.int32)
+                    if m["has_padded"] else None
+                ),
+                written=m["written"],
+                prefill_len=m["prefill_len"],
+                first_token_step=m["first_token_step"],
+                first_token_time=m["first_token_time"],
+                preemptions=m["preemptions"],
+            )
+        for rid_str, m in extra["suspended"].items():
+            rid = int(rid_str)
+            spill = None
+            if m["spill"] is not None:
+                sp = m["spill"]
+                if self.paged:
+                    layers = self._nest(flat, f"sus/{rid}/kv/") or None
+                    kv = {"len": sp["len"], "layers": layers}
+                else:
+                    kv = self._nest(flat, f"sus/{rid}/kv/")
+                spill = {
+                    "kv": kv,
+                    "position": sp["position"],
+                    "padded": (
+                        np.asarray(flat[f"sus/{rid}/padded"], np.int32)
+                        if sp["has_padded"] else None
+                    ),
+                    "written": sp["written"],
+                    "prefill_len": sp["prefill_len"],
+                    "phase": sp["phase"],
+                    "last_logits": np.asarray(flat[f"sus/{rid}/last_logits"]),
+                }
+            self._suspended[rid] = _Suspended(
+                generated=list(m["generated"]),
+                admit_step=m["admit_step"],
+                admit_time=m["admit_time"],
+                first_token_step=m["first_token_step"],
+                first_token_time=m["first_token_time"],
+                preemptions=m["preemptions"],
+                spill=spill,
+            )
+        # --- completions / logs / counters --------------------------------
+        for i, m in enumerate(extra["completions"]):
+            self.completions.append(Completion(
+                request_id=m["request_id"],
+                prompt_tokens=np.asarray(flat[f"comp/{i}/prompt"], np.int32),
+                new_tokens=np.asarray(flat[f"comp/{i}/new"], np.int32),
+                finish_reason=m["finish_reason"],
+                arrival_step=m["arrival_step"],
+                admit_step=m["admit_step"],
+                first_token_step=m["first_token_step"],
+                finish_step=m["finish_step"],
+                admit_time=m["admit_time"],
+                first_token_time=m["first_token_time"],
+                finish_time=m["finish_time"],
+                req_class=m["req_class"],
+                preemptions=m["preemptions"],
+            ))
+        def detuple(e):
+            return tuple(detuple(x) if isinstance(x, list) else x for x in e)
+        self.event_log = [detuple(e) for e in extra["event_log"]]
+        self.phase_log = [tuple(x) for x in extra["phase_log"]]
+        self.horizon_log = [tuple(x) for x in extra["horizon_log"]]
+        self._buckets_seen = {
+            k: set(v) for k, v in extra["buckets_seen"].items()
+        }
+        self._fault_retries = {
+            int(k): v for k, v in extra["fault_retries"].items()
+        }
+        c = extra["counters"]
+        self.step_count = extra["step_count"]
+        self._active_steps = c["active_steps"]
+        self._decode_steps = c["decode_steps"]
+        self._fused_ticks = c["fused_ticks"]
+        self._prefill_lane_steps = c["prefill_lane_steps"]
+        self._generated = c["generated"]
+        self._guarded_ticks = c["guarded_ticks"]
+        self._attended_tokens = c["attended_tokens"]
+        self._preemptions = c["preemptions"]
+        self._resumes = c["resumes"]
+        self._rejections = c["rejections"]
+        self._sentinel_checks = c["sentinel_checks"]
+        self._sentinel_violations = c["sentinel_violations"]
+        self._retries = c["retries"]
+        self._fallbacks = c["fallbacks"]
+        self._table_repairs = c["table_repairs"]
 
     # -------------------------------------------------------------- metrics --
     def device_occupancy(self) -> list[int]:
@@ -1238,6 +2009,23 @@ class ContinuousEngine:
             "preempt_resumes": self._resumes,
             "rejections": self._rejections,
             "shed_count": getattr(self.scheduler, "shed_count", 0),
+            # fault tolerance: sentinel probe telemetry + recovery counters
+            # (docs/serving.md §Fault tolerance).  sentinel_checks counts
+            # (slot, tick) health evaluations; violations count tripped
+            # slots plus table repairs; retries/fallbacks count the two
+            # recovery paths actually taken.
+            "sentinels": self.sentinels,
+            "sentinel_checks": self._sentinel_checks,
+            "sentinel_violations": self._sentinel_violations,
+            "quarantined_blocks": (
+                len(self.pool.quarantined) if self.paged else 0
+            ),
+            "retries": self._retries,
+            "fallbacks": self._fallbacks,
+            "table_repairs": self._table_repairs,
+            "failed_completions": sum(
+                1 for c in self.completions if c.finish_reason == "failed"
+            ),
             # slot-pool sharding over the batch axis (devices=1 -> one range,
             # balance trivially 1.0; see docs/serving.md §Device mesh)
             "num_devices": self.num_devices,

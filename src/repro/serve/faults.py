@@ -1,0 +1,264 @@
+"""Deterministic fault injection for the block-paged serving engine.
+
+The injector corrupts engine state *between ticks* — every fault is a host
+mutation re-uploaded with ``jax.device_put`` under the leaf's original
+sharding, so the jitted tick bodies stay compile-once (no shape, dtype, or
+sharding ever changes; the tick re-reads the same buffers it always does).
+Target selection is seeded (``np.random.default_rng``): the same seed over
+the same workload replays the identical fault sequence, which is what lets
+the chaos tests assert exact detection latency and recovery identity.
+
+Fault classes (``FaultInjector.KINDS``), mapped to the sentinel channel
+that catches them:
+
+``nan_tile`` / ``inf_tile``
+    Poison one (layer, block) arena tile of a live slot's chain with
+    NaN/Inf.  fp arenas only — int8 has no NaN encoding (by construction a
+    quantized arena cannot carry nonfinite payloads; ``scale`` is the int8
+    corruption channel).  Caught by the Σp probe's finiteness channels:
+    NaN K surfaces in the scores, NaN V in the attention output.  The GN
+    softmax itself *launders* NaN scores into a finite Σp = 1 distribution,
+    so the residual alone would miss it — the explicit nonfinite checks are
+    load-bearing.
+``scale``
+    Corrupt one per-block int8 dequant scale with a draw from
+    {NaN, +Inf, -1.0, 1e6}.  Caught by the scale-sanity channel
+    (nonfinite | negative | > SCALE_SANITY_MAX over the live horizon).
+``table``
+    Scribble one live block-table entry to point at a different (valid)
+    physical block.  Caught by the engine's host-side redundancy check
+    against the authoritative chain at the top of ``step()`` — repaired in
+    place before the tick reads it, so nothing propagates.
+``bit_flip``
+    Flip one low-order mantissa bit of one arena element.  Documented
+    DETECTION FLOOR: the GN softmax renormalizes any finite score set to
+    Σp = 1 exactly, so a single-ulp perturbation produces a valid
+    distribution over almost-right values — below every sentinel's
+    threshold by design.  The injector records it (``detectable=False``)
+    so chaos sweeps can report the miss rate honestly instead of counting
+    it against detection latency.
+``device_loss``
+    Poison the entire block range owned by one device (fp arenas), so
+    every live slot on that device violates in the same tick — the
+    engine's aggregation declares the device lost, quarantines its whole
+    range, and retires its slots from admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultRecord:
+    """One injected fault: what was corrupted, where, and at which tick
+    (``step`` is the engine's step_count at injection time — detection
+    latency is measured against it)."""
+
+    kind: str
+    step: int
+    slot: int = -1      # victim slot (-1: not slot-targeted)
+    block: int = -1     # physical block id (-1: not block-targeted)
+    layer: int = -1     # arena layer index (-1: all / n.a.)
+    leaf: str = ""      # arena leaf name ('k', 'v', 'k_scale', ...)
+    device: int = -1    # device_loss only
+    value: str = ""     # poison value ('nan', 'inf', '-1.0', '1e6', ...)
+    detectable: bool = True
+
+
+class FaultInjector:
+    """Seeded between-tick fault injector over a ``ContinuousEngine``.
+
+    Usage::
+
+        inj = FaultInjector(engine, seed=0)
+        rec = inj.inject("nan_tile")   # or inject() for a seeded mix
+        engine.step()                  # sentinel must flag within this tick
+
+    ``inject`` returns None when no viable target exists yet (no live slot
+    with committed KV) — callers step the engine and retry.  All records
+    accumulate in ``self.records``.
+    """
+
+    KINDS = ("nan_tile", "inf_tile", "scale", "table", "bit_flip",
+             "device_loss")
+
+    def __init__(self, engine, seed: int = 0,
+                 kinds: Optional[tuple] = None):
+        if not engine.paged:
+            raise ValueError("FaultInjector targets the block-paged pool")
+        self.engine = engine
+        self.rng = np.random.default_rng(seed)
+        self.kinds = tuple(kinds) if kinds else self.KINDS
+        for k in self.kinds:
+            if k not in self.KINDS:
+                raise ValueError(f"unknown fault kind {k!r}")
+        self.records: list[FaultRecord] = []
+
+    # ------------------------------------------------------------- targets --
+    def _live_slots(self) -> list[int]:
+        """Live slots whose chains hold at least one committed block."""
+        eng = self.engine
+        out = []
+        for s, st in enumerate(eng._slots):
+            if st is None:
+                continue
+            if int(eng.pool.positions[s]) > 0 and eng.pool.chain_of(s):
+                out.append(s)
+        return out
+
+    def _pick_block(self, slot: int) -> int:
+        """A physical block inside the slot's *attended* horizon — blocks
+        past blocks_for(position) are never read, so poisoning them would
+        be undetectable by construction (and meaningless)."""
+        pool = self.engine.pool
+        chain = pool.chain_of(slot)
+        n = max(1, min(len(chain), pool.blocks_for(int(pool.positions[slot]))))
+        return int(chain[self.rng.integers(n)])
+
+    def _arena_items(self, want_scale: bool) -> list[tuple[str, object]]:
+        layers = self.engine.pool.cache["layers"]
+        return [(k, v) for k, v in sorted(layers.items())
+                if k.endswith("_scale") == want_scale]
+
+    def _write_leaf(self, name: str, arr: np.ndarray) -> None:
+        """Re-upload one mutated arena leaf under its original sharding —
+        the only device write the injector ever performs."""
+        pool = self.engine.pool
+        old = pool.cache["layers"][name]
+        # preserve the leaf's commitment: device_put commits, and a
+        # committed leaf where an uncommitted one is expected changes the
+        # tick's pjit compilation key — the injector must perturb *values*,
+        # never the compile story (the chaos bench measures recovery cost,
+        # not recompiles)
+        new = jnp.asarray(arr, old.dtype)
+        if old.committed:
+            new = jax.device_put(new, old.sharding)
+        pool.cache = {**pool.cache,
+                      "layers": {**pool.cache["layers"], name: new}}
+
+    # ----------------------------------------------------------- injection --
+    def inject(self, kind: Optional[str] = None) -> Optional[FaultRecord]:
+        """Inject one fault.  ``kind`` defaults to a seeded draw from the
+        configured mix.  Returns the FaultRecord, or None if no viable
+        target exists this tick (caller: step and retry)."""
+        if kind is None:
+            kind = self.kinds[self.rng.integers(len(self.kinds))]
+        rec = getattr(self, f"_inject_{kind}")()
+        if rec is not None:
+            self.records.append(rec)
+        return rec
+
+    def _poison_tile(self, kind: str, value: float) -> Optional[FaultRecord]:
+        eng = self.engine
+        slots = self._live_slots()
+        if not slots:
+            return None
+        items = self._arena_items(want_scale=False)
+        name, leaf = items[self.rng.integers(len(items))]
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            raise ValueError(
+                f"{kind} targets fp arenas; the {leaf.dtype} arena cannot "
+                "encode nonfinite payloads — use 'scale' against int8")
+        slot = int(slots[self.rng.integers(len(slots))])
+        block = self._pick_block(slot)
+        layer = int(self.rng.integers(leaf.shape[0]))
+        arr = np.asarray(leaf).copy()
+        arr[layer, block] = value
+        self._write_leaf(name, arr)
+        return FaultRecord(kind=kind, step=eng.step_count, slot=slot,
+                           block=block, layer=layer, leaf=name,
+                           value=kind[:3])
+
+    def _inject_nan_tile(self) -> Optional[FaultRecord]:
+        return self._poison_tile("nan_tile", np.nan)
+
+    def _inject_inf_tile(self) -> Optional[FaultRecord]:
+        return self._poison_tile("inf_tile", np.inf)
+
+    def _inject_scale(self) -> Optional[FaultRecord]:
+        eng = self.engine
+        slots = self._live_slots()
+        items = self._arena_items(want_scale=True)
+        if not slots or not items:
+            return None  # fp pool has no scale leaves
+        name, leaf = items[self.rng.integers(len(items))]
+        slot = int(slots[self.rng.integers(len(slots))])
+        block = self._pick_block(slot)
+        layer = int(self.rng.integers(leaf.shape[0]))
+        vals = (np.nan, np.inf, -1.0, 1e6)
+        v = vals[self.rng.integers(len(vals))]
+        arr = np.asarray(leaf).copy()
+        arr[layer, block] = v
+        self._write_leaf(name, arr)
+        return FaultRecord(kind="scale", step=eng.step_count, slot=slot,
+                           block=block, layer=layer, leaf=name, value=str(v))
+
+    def _inject_table(self) -> Optional[FaultRecord]:
+        eng = self.engine
+        slots = self._live_slots()
+        if not slots:
+            return None
+        slot = int(slots[self.rng.integers(len(slots))])
+        pool = eng.pool
+        chain = pool.chain_of(slot)
+        j = int(self.rng.integers(len(chain)))
+        wrong = int((chain[j] + 1 + self.rng.integers(pool.num_blocks - 1))
+                    % pool.num_blocks)
+        pool.tables[slot, j] = wrong
+        pool.tables_dirty = True
+        return FaultRecord(kind="table", step=eng.step_count, slot=slot,
+                           block=int(chain[j]), value=str(wrong))
+
+    def _inject_bit_flip(self) -> Optional[FaultRecord]:
+        eng = self.engine
+        slots = self._live_slots()
+        if not slots:
+            return None
+        items = self._arena_items(want_scale=False)
+        name, leaf = items[self.rng.integers(len(items))]
+        slot = int(slots[self.rng.integers(len(slots))])
+        block = self._pick_block(slot)
+        layer = int(self.rng.integers(leaf.shape[0]))
+        arr = np.asarray(leaf).copy()
+        tile = arr[layer, block]
+        bits = tile.view(np.uint8).reshape(-1)
+        i = int(self.rng.integers(bits.shape[0]))
+        bits[i] ^= 1  # lowest mantissa bit of one element
+        self._write_leaf(name, arr)
+        return FaultRecord(kind="bit_flip", step=eng.step_count, slot=slot,
+                           block=block, layer=layer, leaf=name,
+                           detectable=False)
+
+    def _inject_device_loss(self) -> Optional[FaultRecord]:
+        eng = self.engine
+        pool = eng.pool
+        if eng.num_devices < 2:
+            return None
+        # a device with >= device_loss_min_slots live slots, else no loss
+        # is declarable and the injection would read as per-slot faults
+        counts: dict[int, int] = {}
+        for s in self._live_slots():
+            counts[pool.device_of(s)] = counts.get(pool.device_of(s), 0) + 1
+        viable = [d for d, n in counts.items()
+                  if n >= eng.device_loss_min_slots
+                  and d not in pool._lost_devices]
+        if not viable:
+            return None
+        dev = int(viable[self.rng.integers(len(viable))])
+        lo = dev * pool.blocks_per_device
+        hi = lo + pool.blocks_per_device
+        for name, leaf in self._arena_items(want_scale=False):
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                raise ValueError(
+                    "device_loss poisons arenas with NaN; int8 arenas "
+                    "cannot encode it")
+            arr = np.asarray(leaf).copy()
+            arr[:, lo:hi] = np.nan
+            self._write_leaf(name, arr)
+        return FaultRecord(kind="device_loss", step=eng.step_count,
+                           device=dev, value="nan")

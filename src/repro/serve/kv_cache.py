@@ -310,6 +310,17 @@ class BlockPagedKVPool(_SlotRanges):
     numerators, so stale contents are unreachable (the sampled-reset replay
     test in tests/test_serve_paged.py pins this).
 
+    Quarantine (fault containment): ``quarantine_block`` removes a block
+    from circulation permanently — a free block leaves its free list now, a
+    live block is marked *doomed* and diverted to the quarantine set the
+    moment its refcount reaches zero (so in-flight readers of a shared
+    block are never yanked mid-read).  Quarantined blocks are never
+    recycled, never counted as in-use, and the three-way ledger
+    (free + live + quarantined == num_blocks) is re-verified by
+    ``check_ledger`` in ``reset()`` and after every recycle.
+    ``mark_device_lost`` quarantines a whole device's block range and
+    retires its slot range from admission.
+
     Prefix sharing (``attach_prefix_cache``): every block carries a host
     refcount.  A slot owns the blocks ``ensure`` popped for it (refcount 1),
     *attaches* cached full blocks from a ``PrefixCache`` hit (refcount++,
@@ -403,8 +414,17 @@ class BlockPagedKVPool(_SlotRanges):
         # sharing the reservation ledger under-counts residency (cached
         # chains are reserved by nobody), so equal-HBM sizing needs this one
         self.peak_used_per_device = np.zeros(self.num_devices, np.int64)
+        # fault containment: quarantined blocks are out of circulation for
+        # good; doomed blocks are live-but-condemned (diverted to quarantine
+        # at refcount zero instead of the free list).  reset() clears both —
+        # it reinitializes the pool as if freshly constructed, and the fault
+        # tests lean on that for replay.
+        self.quarantined: set[int] = set()
+        self._doomed: set[int] = set()
+        self._lost_devices: set[int] = set()
         if self.prefix_cache is not None:
             self.prefix_cache.clear()
+        self.check_ledger()
 
     def _free_slot_list(self) -> deque:
         return self._free_slots
@@ -419,7 +439,8 @@ class BlockPagedKVPool(_SlotRanges):
 
     @property
     def blocks_in_use(self) -> int:
-        return self.num_blocks - sum(len(f) for f in self._free_blocks)
+        return (self.num_blocks - sum(len(f) for f in self._free_blocks)
+                - len(self.quarantined))
 
     @property
     def blocks_reserved(self) -> int:
@@ -437,8 +458,14 @@ class BlockPagedKVPool(_SlotRanges):
     def free_blocks_on(self, device: int) -> int:
         return len(self._free_blocks[device])
 
+    def quarantined_on(self, device: int) -> int:
+        lo = device * self.blocks_per_device
+        hi = lo + self.blocks_per_device
+        return sum(1 for b in self.quarantined if lo <= b < hi)
+
     def blocks_in_use_on(self, device: int) -> int:
-        return self.blocks_per_device - len(self._free_blocks[device])
+        return (self.blocks_per_device - len(self._free_blocks[device])
+                - self.quarantined_on(device))
 
     def reserved_on(self, device: int) -> int:
         lo = device * self.per_device_slots
@@ -462,6 +489,8 @@ class BlockPagedKVPool(_SlotRanges):
         discounts the request's fully-shared blocks — they are attached, not
         allocated — and excludes the hit's own blocks from the evictable
         supply (attaching pins them; the COW fork source is pinned too)."""
+        if device in self._lost_devices:
+            return False
         need = self.blocks_for(tokens)
         avail = len(self._free_blocks[device])
         if self.prefix_cache is not None:
@@ -481,6 +510,8 @@ class BlockPagedKVPool(_SlotRanges):
         device can take the request — the FCFS head waits for recycling."""
         best, best_free = None, 0
         for d in range(self.num_devices):
+            if d in self._lost_devices:
+                continue
             free = self.free_slots_on(d)
             if free <= best_free:
                 continue
@@ -533,15 +564,113 @@ class BlockPagedKVPool(_SlotRanges):
             raise ValueError(f"slot {slot} is not allocated")
         self._used.remove(slot)
         self.positions[slot] = 0
-        dev = self.device_of(slot)
         for b in self._slot_blocks.pop(slot):
             self.refcounts[b] -= 1
             if self.refcounts[b] == 0:
-                self._free_blocks[dev].append(b)
+                self._recycle(b)
         self._reserved[slot] = 0
         self._shared[slot] = 0
         self._owned[slot] = 0
-        self._free_slots.append(slot)
+        # a lost device's slot range is retired from admission: freed slots
+        # there must not re-enter the FIFO (their blocks are quarantined)
+        if self.device_of(slot) not in self._lost_devices:
+            self._free_slots.append(slot)
+        self.check_ledger()
+
+    def _recycle(self, block: int) -> None:
+        """A block's refcount just hit zero: back to its device's FIFO free
+        list — unless it was condemned while live, in which case it goes to
+        quarantine instead (the only path a doomed block ever takes)."""
+        if block in self._doomed:
+            self._doomed.discard(block)
+            self.quarantined.add(block)
+        else:
+            self._free_blocks[block // self.blocks_per_device].append(block)
+
+    # ----------------------------------------------------- fault containment --
+    def quarantine_block(self, block: int) -> None:
+        """Permanently remove ``block`` from circulation.  Free blocks leave
+        their free list immediately; live blocks (refcount > 0) are marked
+        doomed and diverted to quarantine when their last reference drops —
+        so a shared block's other readers keep a consistent view until they
+        release it.  Idempotent."""
+        b = int(block)
+        if b in self.quarantined or b in self._doomed:
+            return
+        if self.refcounts[b] > 0:
+            self._doomed.add(b)
+            return
+        dev = b // self.blocks_per_device
+        try:
+            self._free_blocks[dev].remove(b)
+        except ValueError:
+            raise RuntimeError(
+                f"block {b} is neither live nor free — ledger corrupt"
+            ) from None
+        self.quarantined.add(b)
+        self.check_ledger()
+
+    def mark_device_lost(self, device: int) -> None:
+        """Retire a device: quarantine its entire block range and drop its
+        free slots from admission.  Live slots on the device are the
+        engine's problem (it fails or recovers them); their blocks become
+        doomed here and reach quarantine as those slots are freed."""
+        dev = int(device)
+        if dev in self._lost_devices:
+            return
+        self._lost_devices.add(dev)
+        lo, hi = dev * self.blocks_per_device, (dev + 1) * self.blocks_per_device
+        for b in range(lo, hi):
+            self.quarantine_block(b)
+        slo = dev * self.per_device_slots
+        shi = slo + self.per_device_slots
+        for s in [s for s in self._free_slots if slo <= s < shi]:
+            self._free_slots.remove(s)
+        self.check_ledger()
+
+    def scrub_blocks(self, blocks) -> None:
+        """Zero the arena contents and per-block scale entries of
+        ``blocks``.  Healthy recycled blocks are never zeroed (the GN mask
+        guarantee makes that unnecessary); scrubbing exists for *quarantined*
+        blocks only, whose poisoned contents would otherwise leak into
+        healthy slots through stale table entries — IEEE 0 * NaN = NaN, so a
+        masked (exactly-zero-weight) read of a NaN tile still contaminates
+        the output.  A zeroed scale entry additionally reads as "unwritten"
+        to the freeze-at-first-write quantizer, so a scrubbed block is
+        indistinguishable from a pristine one."""
+        blocks = sorted({int(b) for b in blocks})
+        if not blocks:
+            return
+        ix = jnp.asarray(blocks, jnp.int32)
+
+        def z(leaf):
+            out = leaf.at[:, ix].set(jnp.zeros((), leaf.dtype))
+            # re-pin the sharding only for committed (sharded) leaves: a
+            # device_put on an uncommitted leaf would commit it, changing
+            # the tick's pjit compilation key and forcing a silent
+            # recompile of every warmed entry
+            return jax.device_put(out, leaf.sharding) if leaf.committed else out
+
+        self.cache = {**self.cache, "layers": jax.tree.map(z, self.cache["layers"])}
+
+    def check_ledger(self) -> None:
+        """The three-way block ledger must partition the arena exactly:
+        free + live (refcount > 0) + quarantined == num_blocks, with doomed
+        a subset of live.  Raises on any leak (double-free, quarantine
+        escape, refcount drift) — called from ``reset()`` and after every
+        recycle, so a leak is caught at the recycle that caused it."""
+        free = sum(len(f) for f in self._free_blocks)
+        live = int((self.refcounts > 0).sum())
+        q = len(self.quarantined)
+        if free + live + q != self.num_blocks:
+            raise RuntimeError(
+                f"block ledger leak: free {free} + live {live} + quarantined "
+                f"{q} != {self.num_blocks}"
+            )
+        if any(self.refcounts[b] <= 0 for b in self._doomed):
+            raise RuntimeError("doomed block with refcount <= 0 never recycled")
+        if any(self.refcounts[b] != 0 for b in self.quarantined):
+            raise RuntimeError("quarantined block still referenced")
 
     # --------------------------------------------------------- block tables --
     def active_horizon_blocks(self) -> int:
@@ -621,7 +750,8 @@ class BlockPagedKVPool(_SlotRanges):
     def cache_unref(self, block: int) -> None:
         self.refcounts[block] -= 1
         if self.refcounts[block] == 0:
-            self._free_blocks[block // self.blocks_per_device].append(block)
+            self._recycle(int(block))
+            self.check_ledger()
 
     @property
     def cached_blocks(self) -> int:

@@ -36,6 +36,13 @@ import numpy as np
 # preemptible, sheddable under overload).
 REQUEST_CLASSES = ("interactive", "batch")
 
+# closed set of completion verdicts.  'length' = decode budget exhausted,
+# 'stop' = stop token hit, 'rejected' = shed before admission, 'failed' =
+# fault-recovery retry budget exhausted (the request's fault record is in
+# the engine event log).  Validated at Completion construction so a typo'd
+# or novel reason fails at the producer, never silently at a consumer.
+FINISH_REASONS = ("length", "stop", "rejected", "failed")
+
 
 def pad_to_grid(tokens, grid: int) -> np.ndarray:
     """Right-pad a prompt to the next multiple of the chunk grid.
@@ -97,7 +104,7 @@ class Completion:
     request_id: int
     prompt_tokens: np.ndarray
     new_tokens: np.ndarray
-    finish_reason: str  # 'length' | 'stop' | 'rejected'
+    finish_reason: str  # one of FINISH_REASONS
     arrival_step: int
     admit_step: int  # -1 when rejected (never admitted)
     first_token_step: int  # -1 when rejected
@@ -107,6 +114,13 @@ class Completion:
     finish_time: float
     req_class: str = "interactive"
     preemptions: int = 0  # times this request was evicted and later resumed
+
+    def __post_init__(self):
+        if self.finish_reason not in FINISH_REASONS:
+            raise ValueError(
+                f"unknown finish_reason {self.finish_reason!r}; expected one "
+                f"of {FINISH_REASONS}"
+            )
 
     @property
     def tokens(self) -> np.ndarray:
